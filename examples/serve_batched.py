@@ -1,0 +1,14 @@
+"""Batched serving example: prefill + autoregressive decode with KV caches.
+
+Demonstrates the serve path for a dense GQA arch and the SSM decode path
+(constant-state) for mamba2 — the mechanism behind the long_500k cells.
+
+PYTHONPATH=src python examples/serve_batched.py
+"""
+
+from repro.launch import serve as serve_mod
+
+for arch in ("internlm2-1.8b", "mamba2-780m"):
+    print(f"=== {arch} (reduced) ===")
+    serve_mod.main(["--arch", arch, "--reduced", "--batch", "4",
+                    "--prompt-len", "32", "--gen", "16"])

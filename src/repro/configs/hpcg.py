@@ -1,0 +1,27 @@
+"""The paper's own workload: HPCG sparse systems + solver selection.
+
+Not an LM architecture — this config drives launch/solve.py and the solver
+benchmarks.  Weak-scaling sizes follow §4.1: 128^3 per device (the paper uses
+128x128x128 per MPI rank and 128x128x3072 per hybrid socket); strong scaling
+uses the fixed 128x128x6144 grid.
+"""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverConfig:
+    name: str
+    method: str                  # repro.core.solvers.SOLVERS key
+    stencil: str                 # "7pt" | "27pt"
+    local_grid: tuple[int, int, int] = (128, 128, 128)
+    tol: float = 1e-6
+    maxiter: int = 600
+    weak_scaling: bool = True    # grid grows with devices (along mapped dims)
+
+
+SOLVER_CONFIGS = {
+    f"hpcg-{m}-{s}": SolverConfig(name=f"hpcg-{m}-{s}", method=m, stencil=s)
+    for m in ("jacobi", "gauss_seidel", "gauss_seidel_rb", "cg", "cg_nb",
+              "bicgstab", "bicgstab_b1")
+    for s in ("7pt", "27pt")
+}

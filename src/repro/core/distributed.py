@@ -1,0 +1,338 @@
+"""Distributed solver layer: the paper's MPI decomposition on a TPU mesh.
+
+The paper decomposes the 3-D grid explicitly across MPI ranks (HPCCG splits
+only the last dimension) and exchanges boundary planes point-to-point
+(``exchange_externals``, Code 2).  Here the decomposition is expressed as a
+``GridLayout`` mapping grid dims -> mesh axes, halos travel over
+``lax.ppermute`` (nearest-neighbour ICI traffic), and global reductions are
+``lax.psum``.  Everything runs inside one ``jax.shard_map``-wrapped solver so
+the entire iteration is a single compiled program — the analogue of the
+paper's zero-sequential-parts requirement (HDOT).
+
+Faithful mode: 1-D decomposition of z over one flattened axis (the paper's
+HPCCG layout).  Beyond-paper mode: full 3-D decomposition (x->model, y->data,
+z->pod on the production mesh), which reduces halo bytes per device from
+``2·nx·ny`` to the block's surface — see EXPERIMENTS.md §Perf.
+
+Dimension-ordered halo exchange: each dim's slabs span the *padded* extent of
+the other dims, so later exchanges forward previously received halos and the
+27-pt stencil's edge/corner neighbours arrive correctly with only 6 ppermutes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.operators import Stencil
+from repro.core.problems import HPCGProblem
+from repro.core.solvers import SOLVERS, SolveResult
+
+
+@dataclasses.dataclass(frozen=True)
+class GridLayout:
+    """Maps grid dims (x, y, z) to mesh axis names (or None = not split)."""
+
+    mesh: Mesh
+    dim_axes: tuple[str | None, str | None, str | None]
+
+    def __post_init__(self):
+        for a in self.dim_axes:
+            if a is not None and a not in self.mesh.axis_names:
+                raise ValueError(f"axis {a!r} not in mesh {self.mesh.axis_names}")
+
+    @property
+    def reduce_axes(self) -> tuple[str, ...]:
+        return tuple(a for a in self.dim_axes if a is not None)
+
+    def spec(self) -> P:
+        return P(*self.dim_axes)
+
+    def axis_size(self, d: int) -> int:
+        a = self.dim_axes[d]
+        return 1 if a is None else self.mesh.shape[a]
+
+    def local_shape(self, global_shape: tuple[int, int, int]) -> tuple[int, int, int]:
+        out = []
+        for d, g in enumerate(global_shape):
+            n = self.axis_size(d)
+            if g % n:
+                raise ValueError(f"grid dim {d} ({g}) not divisible by mesh axis ({n})")
+            out.append(g // n)
+        return tuple(out)
+
+
+class DistributedOp:
+    """Stencil operator on a local block inside ``shard_map``.
+
+    Protocol-compatible with ``solvers.LocalOp``: the solver code is identical
+    in both worlds (the paper's write-once/parallelise-underneath goal).
+    """
+
+    def __init__(self, stencil: Stencil, layout: GridLayout,
+                 matvec_padded: Callable | None = None,
+                 halo_mode: str = "auto"):
+        self.stencil = stencil
+        self.layout = layout
+        # measured per-stencil bests (EXPERIMENTS.md §Perf): the slice-add
+        # stencil fuses well at 7pt; the conv formulation halves traffic at
+        # 27pt; concat halos beat pad+scatter in both conv cases
+        if matvec_padded is None:
+            matvec_padded = (stencil.conv_matvec_padded()
+                             if stencil.npoint >= 27 else stencil.matvec_padded)
+        self._mv_padded = matvec_padded
+        if halo_mode == "auto":
+            halo_mode = "concat"
+        self.halo_mode = halo_mode
+
+    @property
+    def diag(self) -> float:
+        return self.stencil.diag
+
+    # --- halo exchange (the paper's exchange_externals) ----------------------
+    def pad_exchange(self, x: jax.Array) -> jax.Array:
+        if self.halo_mode == "concat":
+            return self._pad_exchange_concat(x)
+        return self._pad_exchange_scatter(x)
+
+    def _pad_exchange_scatter(self, x: jax.Array) -> jax.Array:
+        """Baseline: zero-pad then scatter received planes into the halos.
+
+        Costs a full-array pad copy plus per-dim ``.at[].set`` updates —
+        measured at ~8r extra HBM traffic per matvec (EXPERIMENTS.md §Perf).
+        """
+        xp = jnp.pad(x, 1)
+        for d, axis in enumerate(self.layout.dim_axes):
+            if axis is None:
+                continue
+            n = self.layout.mesh.shape[axis]
+            if n == 1:
+                continue
+            sl_lo = [slice(None)] * 3
+            sl_hi = [slice(None)] * 3
+            sl_lo[d] = slice(1, 2)        # my bottom interior plane
+            sl_hi[d] = slice(-2, -1)      # my top interior plane
+            up = lax.ppermute(                       # i -> i+1: fills my LOWER halo
+                xp[tuple(sl_hi)], axis, [(i, i + 1) for i in range(n - 1)]
+            )
+            down = lax.ppermute(                     # i -> i-1: fills my UPPER halo
+                xp[tuple(sl_lo)], axis, [(i + 1, i) for i in range(n - 1)]
+            )
+            halo_lo = [slice(None)] * 3
+            halo_hi = [slice(None)] * 3
+            halo_lo[d] = slice(0, 1)
+            halo_hi[d] = slice(xp.shape[d] - 1, xp.shape[d])
+            xp = xp.at[tuple(halo_lo)].set(up)
+            xp = xp.at[tuple(halo_hi)].set(down)
+        return xp
+
+    def _pad_exchange_concat(self, x: jax.Array) -> jax.Array:
+        """Optimised: build the padded array by per-dim concatenation.
+
+        The received (or zero) halo planes are concatenated onto the block
+        dim by dim — one materialisation per dim instead of pad + scatter
+        pairs, and XLA folds the nested concats into a single copy.  Later
+        dims' slabs span the already-extended extents, so 27-pt corner
+        neighbours arrive exactly as in the scatter form.
+        """
+        xp = x
+        for d in range(3):
+            axis = self.layout.dim_axes[d]
+            shape = list(xp.shape)
+            shape[d] = 1
+            zero = jnp.zeros(shape, xp.dtype)
+            n = self.layout.mesh.shape[axis] if axis is not None else 1
+            if axis is None or n == 1:
+                lo = hi = zero
+            else:
+                sl_lo = [slice(None)] * 3
+                sl_hi = [slice(None)] * 3
+                sl_lo[d] = slice(0, 1)
+                sl_hi[d] = slice(xp.shape[d] - 1, xp.shape[d])
+                lo = lax.ppermute(xp[tuple(sl_hi)], axis,
+                                  [(i, i + 1) for i in range(n - 1)])
+                hi = lax.ppermute(xp[tuple(sl_lo)], axis,
+                                  [(i + 1, i) for i in range(n - 1)])
+            xp = jnp.concatenate([lo, xp, hi], axis=d)
+        return xp
+
+    def matvec(self, x: jax.Array) -> jax.Array:
+        return self._mv_padded(self.pad_exchange(x))
+
+    # --- global reductions (the paper's MPI_Allreduce) -----------------------
+    def dot(self, a: jax.Array, b: jax.Array) -> jax.Array:
+        # single psum over the tuple of axes == ONE all-reduce (one barrier),
+        # exactly like one MPI_Allreduce over the world communicator.
+        return lax.psum(jnp.vdot(a, b), self.layout.reduce_axes)
+
+    def dot2(self, a, b, c, d):
+        """Two dot products in ONE collective (the paper fuses scalar pairs
+        into a single MPI_Allreduce; here: stack partials, single psum)."""
+        pair = lax.psum(
+            jnp.stack([jnp.vdot(a, b), jnp.vdot(c, d)]), self.layout.reduce_axes
+        )
+        return pair[0], pair[1]
+
+def make_layout(mesh: Mesh, dims_map: dict[str, str | None] | None = None) -> GridLayout:
+    """Default layouts per mesh:
+
+    * ('data','model')        -> x: model, y: data, z: unsplit  (single pod)
+    * ('pod','data','model')  -> x: model, y: data, z: pod      (multi pod)
+    * 1-D mesh ('cells',)     -> z: cells (the paper-faithful HPCCG layout)
+    """
+    names = mesh.axis_names
+    if dims_map is not None:
+        da = (dims_map.get("x"), dims_map.get("y"), dims_map.get("z"))
+        return GridLayout(mesh=mesh, dim_axes=da)
+    if names == ("cells",):
+        return GridLayout(mesh=mesh, dim_axes=(None, None, "cells"))
+    if names == ("data", "model"):
+        return GridLayout(mesh=mesh, dim_axes=("model", "data", None))
+    if names == ("pod", "data", "model"):
+        return GridLayout(mesh=mesh, dim_axes=("model", "data", "pod"))
+    raise ValueError(f"no default layout for mesh axes {names}")
+
+
+def solve_shardmap(
+    problem: HPCGProblem,
+    method: str,
+    mesh: Mesh,
+    *,
+    dims_map: dict[str, str | None] | None = None,
+    tol: float = 1e-6,
+    maxiter: int = 600,
+    norm_ref: float | None = 1.0,   # paper: absolute ||r|| < eps (HPCCG criterion)
+    matvec_padded: Callable | None = None,
+    halo_mode: str = "auto",
+):
+    """Build the shard_map-wrapped distributed solver; returns (fn, in_specs).
+
+    ``fn(b, x0) -> SolveResult`` with b/x0 GLOBAL arrays sharded per layout.
+    """
+    layout = make_layout(mesh, dims_map)
+    solver = SOLVERS[method]
+    stencil = problem.stencil
+
+    def local_solve(b_loc: jax.Array, x0_loc: jax.Array) -> SolveResult:
+        op = DistributedOp(stencil, layout, matvec_padded=matvec_padded,
+                           halo_mode=halo_mode)
+        return solver(
+            op, b_loc, x0_loc, tol=tol, maxiter=maxiter,
+            dot=op.dot, norm_ref=norm_ref,
+        )
+
+    spec = layout.spec()
+    fn = jax.shard_map(
+        local_solve,
+        mesh=mesh,
+        in_specs=(spec, spec),
+        out_specs=SolveResult(x=spec, iters=P(), res_norm=P(), history=P()),
+    )
+    return fn, layout
+
+
+def solve_step_shardmap(
+    problem: HPCGProblem,
+    method: str,
+    mesh: Mesh,
+    *,
+    dims_map: dict[str, str | None] | None = None,
+    matvec_padded: Callable | None = None,
+    halo_mode: str = "auto",
+):
+    """One *iteration* of the solver as a standalone shard_mapped function.
+
+    Used by the dry-run/roofline: lowering a single iteration makes
+    ``cost_analysis`` exact (no while-loop trip-count ambiguity) and exposes
+    the per-iteration collective schedule for the overlap analysis.
+    """
+    layout = make_layout(mesh, dims_map)
+    stencil = problem.stencil
+
+    def local_step(b_loc, x_loc, r_loc, p_loc, Ap_loc, an, ad):
+        op = DistributedOp(stencil, layout, matvec_padded=matvec_padded,
+                           halo_mode=halo_mode)
+        if method == "cg":
+            Ap = op.matvec(p_loc)
+            pAp = op.dot(p_loc, Ap)
+            alpha = an / pAp
+            x = x_loc + alpha * p_loc
+            r = r_loc - alpha * Ap
+            rr = op.dot(r, r)
+            beta = rr / an
+            p = r + beta * p_loc
+            return x, r, p, Ap, rr, pAp
+        elif method == "cg_nb":
+            alpha = an / ad
+            r = r_loc - alpha * Ap_loc
+            an_new = op.dot(r, r)
+            Ar = op.matvec(r)
+            beta = an_new / an
+            Ap = Ar + beta * Ap_loc
+            p = r + beta * p_loc
+            ad_new = op.dot(Ap, p)
+            x = x_loc + alpha * p_loc
+            return x, r, p, Ap, an_new, ad_new
+        elif method == "jacobi":
+            x = x_loc + r_loc / op.diag
+            r = b_loc - op.matvec(x)
+            rr = op.dot(r, r)
+            return x, r, p_loc, Ap_loc, rr, ad
+        elif method == "bicgstab":
+            # one classical BiCGStab iteration (3 blocking reductions);
+            # the Ap slot carries r-hat for the step driver.
+            rhat = Ap_loc
+            v = op.matvec(p_loc)
+            rhat_v = op.dot(rhat, v)            # barrier 1
+            alpha = an / rhat_v                 # an slot = rho
+            s = r_loc - alpha * v
+            t = op.matvec(s)
+            ts, tt = op.dot2(t, s, t, t)        # barrier 2
+            omega = ts / tt
+            x = x_loc + alpha * p_loc + omega * s
+            r = s - omega * t
+            rho_new, rr = op.dot2(rhat, r, r, r)  # barrier 3
+            beta = (rho_new / an) * (alpha / omega)
+            p = r + beta * (p_loc - omega * v)
+            return x, r, p, rhat, rho_new, rr
+        elif method == "bicgstab_b1":
+            rhat = Ap_loc  # slot reuse for the step driver
+            Ap = op.matvec(p_loc)
+            adj = op.dot(Ap, rhat)          # the ONE blocking reduction
+            alpha = an / adj
+            s = r_loc - alpha * Ap
+            As = op.matvec(s)
+            ts, tt = op.dot2(As, s, As, As)
+            # keep the overlap payloads un-fused from their reduction
+            # consumers (see solvers.bicgstab_b1)
+            x_half = lax.optimization_barrier(x_loc + alpha * p_loc)
+            omega = ts / tt
+            x = x_half + omega * s
+            r = s - omega * As
+            an_new, brr = op.dot2(r, rhat, r, r)
+            p_half = lax.optimization_barrier(p_loc - omega * Ap)
+            p = r + (an_new / (adj * omega)) * p_half
+            return x, r, p, Ap, an_new, brr
+        elif method == "gauss_seidel":
+            from repro.core.solvers import _plane_sweep
+            x = _plane_sweep(op, b_loc, x_loc, forward=True)
+            x = _plane_sweep(op, b_loc, x_loc, forward=False)
+            r = b_loc - op.matvec(x)
+            rr = op.dot(r, r)
+            return x, r, p_loc, Ap_loc, rr, ad
+        raise ValueError(f"unknown method {method}")
+
+    spec = layout.spec()
+    fn = jax.shard_map(
+        local_step,
+        mesh=mesh,
+        in_specs=(spec, spec, spec, spec, spec, P(), P()),
+        out_specs=(spec, spec, spec, spec, P(), P()),
+    )
+    return fn, layout

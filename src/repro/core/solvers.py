@@ -1,0 +1,400 @@
+"""The paper's iterative methods (Alg. 1-2 + Jacobi + symmetric Gauss-Seidel).
+
+Every solver is a pure, jittable JAX function built on ``lax.while_loop``.
+They are written against a small operator protocol so the *same* code runs:
+
+  * single-device  — ``LocalOp`` (zero-padded halos), and
+  * multi-device   — ``repro.core.distributed.DistributedOp`` (halos via
+    ``lax.ppermute``, reductions via ``lax.psum``) inside ``shard_map``.
+
+That mirrors the paper's design where the algorithm is written once and the
+parallelisation (MPI / MPI+tasks) is swapped underneath.
+
+Barrier structure reproduced from the paper (§3.1, Fig. 1):
+
+  * ``cg``            — 2 blocking reductions / iteration.
+  * ``cg_nb``         — Alg. 1: the SpMV is applied to ``r`` so ``A·p`` becomes a
+                        vector update; both reductions leave the critical path
+                        (the ``r·r`` reduction overlaps the SpMV, the ``Ap·p``
+                        reduction overlaps the lagged ``x`` update).  NOTE:
+                        Alg. 1 line 9 is implemented with the sign convention
+                        that keeps ``x_j = x_{j-1} + α_{j-1} p_{j-1}`` (the
+                        printed minus sign is a typo — with it the recursion
+                        contradicts line 4).  Equivalence with classical CG is
+                        asserted by tests/test_solvers.py.
+  * ``bicgstab``      — 3 blocking reductions / iteration.
+  * ``bicgstab_b1``   — Alg. 2: ω's reductions overlap the ``x_{j+1/2}`` update,
+                        the ``α_n``/``β`` reductions overlap the ``p_{j+1/2}``
+                        update; one blocking reduction (``α_d``) remains.
+                        Includes the restart procedure (lines 13-15).
+  * ``jacobi``        — 1 reduction (the residual norm).
+  * ``sym_gauss_seidel_relaxed`` — the paper's *relaxed* tasked GS adapted to
+                        TPU: GS-fresh across z-planes inside a block, stale
+                        across blocks (the role the benign data races play in
+                        the paper's Code 4).
+  * ``sym_gauss_seidel_rb``      — red-black coloured symmetric GS (§3.4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.operators import Stencil
+
+
+class SolveResult(NamedTuple):
+    x: jax.Array
+    iters: jax.Array          # number of completed iterations
+    res_norm: jax.Array       # final ||r||_2 (method's own residual estimate)
+    history: jax.Array        # (maxiter+1,) residual-norm history, NaN-padded
+
+
+class LocalOp:
+    """Single-device stencil operator (zero halos == physical boundary)."""
+
+    def __init__(self, stencil: Stencil, matvec_padded: Callable | None = None):
+        self.stencil = stencil
+        self._mv_padded = matvec_padded or stencil.matvec_padded
+
+    @property
+    def diag(self) -> float:
+        return self.stencil.diag
+
+    def pad_exchange(self, x: jax.Array) -> jax.Array:
+        return jnp.pad(x, 1)
+
+    def matvec(self, x: jax.Array) -> jax.Array:
+        return self._mv_padded(self.pad_exchange(x))
+
+
+def _default_dot(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.vdot(a, b)
+
+
+def _prepare(A, b, dot, norm_ref, tol):
+    dot = dot or _default_dot
+    if norm_ref is None:
+        norm_ref = jnp.sqrt(dot(b, b))
+    thresh2 = (tol * norm_ref) ** 2
+    return dot, norm_ref, thresh2
+
+
+def _hist_init(maxiter: int, v0, dtype) -> jax.Array:
+    h = jnp.full((maxiter + 1,), jnp.nan, dtype=dtype)
+    return h.at[0].set(v0.astype(dtype))
+
+
+# =============================================================================
+# Krylov methods
+# =============================================================================
+
+def cg(A, b, x0, *, tol=1e-6, maxiter=500, dot=None, norm_ref=None) -> SolveResult:
+    """Classical conjugate gradient (HPCCG reference; 2 blocking reductions)."""
+    dot, _, thresh2 = _prepare(A, b, dot, norm_ref, tol)
+    r = b - A.matvec(x0)
+    p = r
+    rr = dot(r, r)
+    hist = _hist_init(maxiter, jnp.sqrt(rr), b.dtype)
+
+    def cond(c):
+        _, _, _, rr, k, _ = c
+        return (rr >= thresh2) & (k < maxiter)
+
+    def body(c):
+        x, r, p, rr, k, hist = c
+        Ap = A.matvec(p)
+        pAp = dot(p, Ap)              # blocking: feeds alpha immediately
+        alpha = rr / pAp
+        x = x + alpha * p
+        r = r - alpha * Ap
+        rr_new = dot(r, r)            # blocking: feeds beta before next SpMV
+        beta = rr_new / rr
+        p = r + beta * p
+        hist = hist.at[k + 1].set(jnp.sqrt(rr_new).astype(hist.dtype))
+        return (x, r, p, rr_new, k + 1, hist)
+
+    x, r, p, rr, k, hist = lax.while_loop(cond, body, (x0, r, p, rr, 0, hist))
+    return SolveResult(x=x, iters=k, res_norm=jnp.sqrt(rr), history=hist)
+
+
+def cg_nb(A, b, x0, *, tol=1e-6, maxiter=500, dot=None, norm_ref=None) -> SolveResult:
+    """Nonblocking CG (paper Alg. 1).
+
+    The SpMV is applied to ``r_j``; ``A·p_j`` is reconstructed as a vector
+    update (line 6).  Both reductions are off the critical path: the dataflow
+    successor of ``α_n = r·r`` is line 6 which *follows* the SpMV, and the
+    successor of ``α_d`` is the *next* iteration's ``α``, past the lagged
+    ``x`` update (line 9).  Costs (15+n̄)r touched elements vs CG's (12+n̄)r.
+    """
+    dot, _, thresh2 = _prepare(A, b, dot, norm_ref, tol)
+    r = b - A.matvec(x0)
+    p = r
+    Ap = A.matvec(p)
+    an = dot(r, r)
+    ad = dot(Ap, p)
+    hist = _hist_init(maxiter, jnp.sqrt(an), b.dtype)
+
+    def cond(c):
+        _, _, _, _, an, _, k, _ = c
+        return (an >= thresh2) & (k < maxiter)
+
+    def body(c):
+        x, r, p, Ap, an, ad, k, hist = c
+        alpha = an / ad                       # α_{j-1}
+        r_new = r - alpha * Ap                # Tk 0 (line 4)
+        an_new = dot(r_new, r_new)            # Tk 0 (line 5) — reduction in flight...
+        Ar = A.matvec(r_new)                  # ...overlapped with this SpMV
+        beta = an_new / an
+        Ap_new = Ar + beta * Ap               # Tk 1 & 2 (line 6) — no SpMV on p!
+        p_new = r_new + beta * p              # Tk 2 (line 7)
+        ad_new = dot(Ap_new, p_new)           # Tk 2 (line 8) — overlapped with...
+        x = x + alpha * p                     # Tk 3 (line 9, sign-fixed; uses OLD p)
+        hist = hist.at[k + 1].set(jnp.sqrt(an_new).astype(hist.dtype))
+        return (x, r_new, p_new, Ap_new, an_new, ad_new, k + 1, hist)
+
+    x, r, p, Ap, an, ad, k, hist = lax.while_loop(
+        cond, body, (x0, r, p, Ap, an, ad, 0, hist)
+    )
+    # The x update lags one iteration; apply the final correction term.
+    x = x + (an / ad) * p
+    return SolveResult(x=x, iters=k, res_norm=jnp.sqrt(an), history=hist)
+
+
+def bicgstab(A, b, x0, *, tol=1e-6, maxiter=500, dot=None, norm_ref=None) -> SolveResult:
+    """Classical BiCGStab (3 blocking reductions per iteration)."""
+    dot, _, thresh2 = _prepare(A, b, dot, norm_ref, tol)
+    r = b - A.matvec(x0)
+    rhat = r
+    p = r
+    rho = dot(rhat, r)
+    rr = dot(r, r)
+    hist = _hist_init(maxiter, jnp.sqrt(rr), b.dtype)
+
+    def cond(c):
+        _, _, _, _, rho, rr, k, _ = c
+        return (rr >= thresh2) & (k < maxiter)
+
+    def body(c):
+        x, r, rhat, p, rho, rr, k, hist = c
+        v = A.matvec(p)
+        rhat_v = dot(rhat, v)                 # barrier 1
+        alpha = rho / rhat_v
+        s = r - alpha * v
+        t = A.matvec(s)
+        ts = dot(t, s)                        # barrier 2 (fused pair of dots)
+        tt = dot(t, t)
+        omega = ts / tt
+        x = x + alpha * p + omega * s
+        r = s - omega * t
+        rho_new = dot(rhat, r)                # barrier 3 (fused pair of dots)
+        rr_new = dot(r, r)
+        beta = (rho_new / rho) * (alpha / omega)
+        p = r + beta * (p - omega * v)
+        hist = hist.at[k + 1].set(jnp.sqrt(rr_new).astype(hist.dtype))
+        return (x, r, rhat, p, rho_new, rr_new, k + 1, hist)
+
+    x, r, rhat, p, rho, rr, k, hist = lax.while_loop(
+        cond, body, (x0, r, rhat, p, rho, rr, 0, hist)
+    )
+    return SolveResult(x=x, iters=k, res_norm=jnp.sqrt(rr), history=hist)
+
+
+def bicgstab_b1(
+    A, b, x0, *, tol=1e-6, maxiter=500, dot=None, norm_ref=None,
+    eps_restart=1e-5,
+) -> SolveResult:
+    """BiCGStab one-blocking (paper Alg. 2) with the restart procedure.
+
+    Only ``α_d = (A·p)·r'`` blocks; ω's pair of reductions overlaps the
+    ``x_{j+1/2}`` update (Tk 3) and the ``α_n``/``β`` pair overlaps the
+    ``p_{j+1/2}`` update (Tk 5).  Restart (lines 13-15) triggers on
+    ``sqrt(|α_n|) < ε_restart·||b||`` and re-orthogonalises ``r'``,
+    eliminating the near-breakdown amplification (and, in the paper's task
+    world, accumulated nondeterministic rounding).
+    """
+    dot, norm_ref, thresh2 = _prepare(A, b, dot, norm_ref, tol)
+    restart_thresh = eps_restart * norm_ref
+    r = b - A.matvec(x0)
+    p = r
+    beta_rr = dot(r, r)                        # β_0 = r_0·r_0
+    rhat = r / jnp.sqrt(beta_rr)               # r'
+    an = dot(r, rhat)                          # α_{n,0} = sqrt(β_0)
+    hist = _hist_init(maxiter, jnp.sqrt(beta_rr), b.dtype)
+
+    def cond(c):
+        _, _, _, _, an, beta_rr, k, _, _ = c
+        return (beta_rr >= thresh2) & (k < maxiter)     # line 7 check
+
+    def body(c):
+        x, r, p, rhat, an, beta_rr, k, hist, nrestart = c
+        Ap = A.matvec(p)
+        ad = dot(Ap, rhat)                    # Tk 0 (line 3) — the ONE blocking reduction
+        alpha = an / ad
+        s = r - alpha * Ap                    # Tk 1 (line 4)
+        As = A.matvec(s)
+        ts = dot(As, s)                       # Tk 2 (line 5) — overlapped with...
+        tt = dot(As, As)
+        # optimization_barrier = the Tk-3-is-its-own-task constraint: without
+        # it XLA fuses this update into the omega-dependent x_{j+1} and the
+        # overlap window vanishes (measured: slack 4096 -> 0 bytes)
+        x_half = lax.optimization_barrier(x + alpha * p)   # ...Tk 3 (line 6)
+        omega = ts / tt
+        x_new = x_half + omega * s            # Tk 4 (line 8; == line 18 on exit)
+        r_new = s - omega * As                # Tk 4 (line 9)
+        an_new = dot(r_new, rhat)             # Tk 4 (line 10) — overlapped with...
+        beta_rr_new = dot(r_new, r_new)       # Tk 4 (line 11)
+        p_half = lax.optimization_barrier(p - omega * Ap)  # ...Tk 5 (line 12)
+        restart = jnp.sqrt(jnp.abs(an_new)) < restart_thresh
+        p_reg = r_new + (an_new / (ad * omega)) * p_half   # Tk 7 (line 17)
+        p_new = jnp.where(restart, r_new, p_reg)           # Tk 6 (line 14)
+        rhat_new = jnp.where(restart, r_new / jnp.sqrt(beta_rr_new), rhat)  # line 15
+        an_next = jnp.where(restart, jnp.sqrt(beta_rr_new), an_new)
+        hist = hist.at[k + 1].set(jnp.sqrt(beta_rr_new).astype(hist.dtype))
+        return (x_new, r_new, p_new, rhat_new, an_next, beta_rr_new, k + 1,
+                hist, nrestart + restart.astype(jnp.int32))
+
+    x, r, p, rhat, an, beta_rr, k, hist, nrestart = lax.while_loop(
+        cond, body, (x0, r, p, rhat, an, beta_rr, 0, hist, jnp.int32(0))
+    )
+    return SolveResult(x=x, iters=k, res_norm=jnp.sqrt(beta_rr), history=hist)
+
+
+# =============================================================================
+# Stationary methods
+# =============================================================================
+
+def jacobi(A, b, x0, *, tol=1e-6, maxiter=1000, dot=None, norm_ref=None) -> SolveResult:
+    """Jacobi: x += D^{-1} r; one SpMV + one reduction per iteration."""
+    dot, _, thresh2 = _prepare(A, b, dot, norm_ref, tol)
+    r = b - A.matvec(x0)
+    rr = dot(r, r)
+    hist = _hist_init(maxiter, jnp.sqrt(rr), b.dtype)
+
+    def cond(c):
+        _, _, rr, k, _ = c
+        return (rr >= thresh2) & (k < maxiter)
+
+    def body(c):
+        x, r, rr, k, hist = c
+        x = x + r / A.diag
+        r = b - A.matvec(x)
+        rr = dot(r, r)
+        hist = hist.at[k + 1].set(jnp.sqrt(rr).astype(hist.dtype))
+        return (x, r, rr, k + 1, hist)
+
+    x, r, rr, k, hist = lax.while_loop(cond, body, (x0, r, rr, 0, hist))
+    return SolveResult(x=x, iters=k, res_norm=jnp.sqrt(rr), history=hist)
+
+
+def _plane_sweep(A, b, x, *, forward: bool) -> jax.Array:
+    """One relaxed Gauss-Seidel sweep: GS-fresh across z-planes, Jacobi within
+    a plane, stale across device blocks (halos exchanged once per sweep)."""
+    nz = x.shape[2]
+
+    def step(i, xp):
+        k = i if forward else nz - 1 - i
+        off = A.stencil.plane_offdiag_apply(xp, k)
+        plane = (b[:, :, k] - off) / A.diag
+        return lax.dynamic_update_slice(xp, plane[:, :, None], (1, 1, k + 1))
+
+    xp = A.pad_exchange(x)
+    xp = lax.fori_loop(0, nz, step, xp)
+    return xp[1:-1, 1:-1, 1:-1]
+
+
+def sym_gauss_seidel_relaxed(
+    A, b, x0, *, tol=1e-6, maxiter=1000, dot=None, norm_ref=None
+) -> SolveResult:
+    """Relaxed symmetric GS (paper §3.4 Code 4, TPU adaptation).
+
+    Forward sweep (ascending z-planes) then backward sweep (descending), each
+    using the freshest available plane values — the deterministic analogue of
+    the paper's benign data races that "mimic the Gauss-Seidel behaviour".
+    """
+    dot, _, thresh2 = _prepare(A, b, dot, norm_ref, tol)
+    r = b - A.matvec(x0)
+    rr = dot(r, r)
+    hist = _hist_init(maxiter, jnp.sqrt(rr), b.dtype)
+
+    def cond(c):
+        _, rr, k, _ = c
+        return (rr >= thresh2) & (k < maxiter)
+
+    def body(c):
+        x, rr, k, hist = c
+        x = _plane_sweep(A, b, x, forward=True)
+        x = _plane_sweep(A, b, x, forward=False)
+        r = b - A.matvec(x)
+        rr = dot(r, r)
+        hist = hist.at[k + 1].set(jnp.sqrt(rr).astype(hist.dtype))
+        return (x, rr, k + 1, hist)
+
+    x, rr, k, hist = lax.while_loop(cond, body, (x0, rr, 0, hist))
+    return SolveResult(x=x, iters=k, res_norm=jnp.sqrt(rr), history=hist)
+
+
+def _colour_mask(shape: tuple[int, int, int], colour: int) -> jax.Array:
+    i = lax.broadcasted_iota(jnp.int32, shape, 0)
+    j = lax.broadcasted_iota(jnp.int32, shape, 1)
+    k = lax.broadcasted_iota(jnp.int32, shape, 2)
+    return ((i + j + k) % 2) == colour
+
+
+def _rb_half_sweep(A, b, x, colour_mask) -> jax.Array:
+    off = A.stencil.offdiag_apply_padded(A.pad_exchange(x))
+    return jnp.where(colour_mask, (b - off) / A.diag, x)
+
+
+def sym_gauss_seidel_rb(
+    A, b, x0, *, tol=1e-6, maxiter=1000, dot=None, norm_ref=None
+) -> SolveResult:
+    """Red-black coloured symmetric GS (paper §3.4).
+
+    Forward = red, black; backward = black, red.  Exact GS reordering for the
+    7-pt stencil (bipartite); a coloured relaxation for the 27-pt one, with
+    correspondingly different convergence (the effect the paper measures).
+    """
+    dot, _, thresh2 = _prepare(A, b, dot, norm_ref, tol)
+    red = _colour_mask(x0.shape, 0)
+    black = _colour_mask(x0.shape, 1)
+    r = b - A.matvec(x0)
+    rr = dot(r, r)
+    hist = _hist_init(maxiter, jnp.sqrt(rr), b.dtype)
+
+    def cond(c):
+        _, rr, k, _ = c
+        return (rr >= thresh2) & (k < maxiter)
+
+    def body(c):
+        x, rr, k, hist = c
+        x = _rb_half_sweep(A, b, x, red)      # forward
+        x = _rb_half_sweep(A, b, x, black)
+        x = _rb_half_sweep(A, b, x, black)    # backward
+        x = _rb_half_sweep(A, b, x, red)
+        r = b - A.matvec(x)
+        rr = dot(r, r)
+        hist = hist.at[k + 1].set(jnp.sqrt(rr).astype(hist.dtype))
+        return (x, rr, k + 1, hist)
+
+    x, rr, k, hist = lax.while_loop(cond, body, (x0, rr, 0, hist))
+    return SolveResult(x=x, iters=k, res_norm=jnp.sqrt(rr), history=hist)
+
+
+SOLVERS: dict[str, Callable] = {
+    "jacobi": jacobi,
+    "gauss_seidel": sym_gauss_seidel_relaxed,
+    "gauss_seidel_rb": sym_gauss_seidel_rb,
+    "cg": cg,
+    "cg_nb": cg_nb,
+    "bicgstab": bicgstab,
+    "bicgstab_b1": bicgstab_b1,
+}
+
+#: methods proposed by the paper mapped to their classical baselines
+VARIANT_OF = {"cg_nb": "cg", "bicgstab_b1": "bicgstab", "gauss_seidel": "gauss_seidel_rb"}

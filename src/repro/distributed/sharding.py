@@ -1,0 +1,257 @@
+"""Sharding rules: params (tensor×FSDP), activations, caches, optimizer state.
+
+Scheme (DESIGN.md §5): tensor parallelism over ``model`` (heads / ffn / expert
+dim), FSDP over ``data`` (the other weight dim), pure data parallelism over
+``pod`` (params replicated across pods — gradients cross the DCI once per
+step, which the overlapped-psum trick hides; see distributed/compression.py
+for the int8 cross-pod path).
+
+Rules are keyed on the *leaf name* (rightmost dict key), specified from the
+rightmost dims; leading stacked-layer dims are padded with None.  GSPMD pads
+non-divisible dims (e.g. llama4's 40 heads over 16 shards) — the padding
+waste is accounted in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# leaf name -> spec of the LAST len(spec) dims
+_RULES: dict[str, tuple] = {
+    # embeddings / head
+    "embed": ("model", "data"),
+    "lm_head": ("model", "data"),
+    # attention: K/V projections replicated over model (small; keeps GQA
+    # logits head-sharded — see models/attention._sdpa)
+    "wq": ("data", "model"),
+    "wk": ("data", None),
+    "wv": ("data", None),
+    "wo": ("model", "data"),
+    "bq": ("model",),
+    "bk": (None,),
+    "bv": (None,),
+    "q_norm": (None,),
+    "k_norm": (None,),
+    # mlp
+    "w_in": ("data", "model"),
+    "w_out": ("model", "data"),
+    # moe (leading E dim sharded over model = expert parallelism)
+    "router": ("data", None),
+    "moe_w_in": ("model", "data", None),
+    "moe_w_out": ("model", None, "data"),
+    "shared_in": ("data", "model"),
+    "shared_out": ("model", "data"),
+    # ssm (split projections; z/x head-sharded over model, B/C/dt replicated)
+    "w_z": ("data", "model"),
+    "w_x": ("data", "model"),
+    "w_B": ("data", None),
+    "w_C": ("data", None),
+    "w_dt": ("data", None),
+    "out_proj": ("model", "data"),
+    "conv_x": (None, "model"),
+    "conv_B": (None, None),
+    "conv_C": (None, None),
+    "conv_bx": ("model",),
+    "conv_bB": (None,),
+    "conv_bC": (None,),
+    "A_log": (None,),
+    "D": (None,),
+    "dt_bias": (None,),
+}
+
+_REPLICATED_SUFFIXES = ("norm", "scale", "bias_norm")
+
+
+def _leaf_rule(path) -> tuple | None:
+    keys = [str(getattr(p, "key", p)) for p in path]
+    name = keys[-1]
+    # moe expert weights share names with mlp weights; disambiguate via parent
+    if len(keys) >= 2 and keys[-2] == "moe" and name in ("w_in", "w_out"):
+        return _RULES["moe_" + name]
+    if name in _RULES:
+        return _RULES[name]
+    if "norm" in name:
+        return ()
+    return None
+
+
+def _divisible(spec_tuple, shape, mesh: Mesh):
+    """Drop (replicate) any axis that does not divide its dim — pjit
+    in_shardings require exact divisibility (e.g. hymba's vocab 32001)."""
+    out = []
+    for dim, a in zip(shape, spec_tuple):
+        if a is None:
+            out.append(None)
+            continue
+        axes = a if isinstance(a, tuple) else (a,)
+        size = 1
+        for ax in axes:
+            size *= mesh.shape[ax]
+        out.append(a if dim % size == 0 else None)
+    return tuple(out)
+
+
+def param_specs(params: Any, mesh: Mesh, cfg=None) -> Any:
+    """PartitionSpec pytree for a params/grads/moments tree.
+
+    ``cfg`` enables arch-dependent rules: MHA (n_kv_heads == n_heads) shards
+    the K/V projections over the tensor axis like Q (see
+    models/attention._project_qkv); GQA keeps them replicated.
+    """
+    mha = cfg is not None and getattr(cfg, "n_kv_heads", 0) == getattr(
+        cfg, "n_heads", -1)
+
+    def spec(path, leaf):
+        rule = _leaf_rule(path)
+        name = str(getattr(path[-1], "key", path[-1]))
+        if mha and name in ("wk", "wv"):
+            rule = ("data", "model")
+        if mha and name in ("bk", "bv"):
+            rule = ("model",)
+        rank = leaf.ndim if hasattr(leaf, "ndim") else len(leaf.shape)
+        if rule is None or rule == ():
+            return P()
+        pad = rank - len(rule)
+        full = ((None,) * pad) + tuple(rule)
+        return P(*_divisible(full, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def param_shardings(params: Any, mesh: Mesh, cfg=None) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params, mesh, cfg))
+
+
+def dp_axes_of(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def recommended_dp_axes(cfg, mesh: Mesh) -> tuple[str, ...]:
+    """Per-arch parallelism profile (EXPERIMENTS.md §Perf-2b).
+
+    Small-d dense/ssm/hybrid archs waste the tensor axis: 16-way TP+SP moves
+    ~4·B·S·d of activations per layer while their per-layer weights are tiny —
+    measured 5-6x more collective bytes than a pure-FSDP layout that shards
+    the batch over BOTH axes and all-gathers the (small) weights instead.
+    MoE archs keep the tensor axis (expert parallelism needs it), as do
+    large-d dense models where weight traffic dominates.
+    """
+    if cfg.family == "moe" or cfg.d_model > 2304:
+        return dp_axes_of(mesh)
+    return tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+
+
+def _longest_divisible(axes: tuple[str, ...], dim: int, mesh: Mesh):
+    """Longest prefix of ``axes`` whose product divides ``dim``."""
+    out = []
+    size = 1
+    for a in axes:
+        if dim % (size * mesh.shape[a]) == 0:
+            out.append(a)
+            size *= mesh.shape[a]
+        else:
+            break
+    if not out:
+        return None
+    return tuple(out) if len(out) > 1 else out[0]
+
+
+def batch_specs(batch: Any, mesh: Mesh,
+                dp_axes: tuple[str, ...] | None = None) -> Any:
+    """Input sharding: batch dims over the dp axes; caches split heads/cache
+    over model where profitable."""
+    dp = dp_axes if dp_axes is not None else dp_axes_of(mesh)
+    tp_in_dp = "model" in dp
+    dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def spec(path, leaf):
+        keys = [str(getattr(p, "key", p)) for p in path]
+        name = keys[-1]
+        shape = leaf.shape
+        if name == "cur_pos" or len(shape) == 0:
+            return P()
+        if name == "pos":                     # (L, C) slot positions
+            return P()
+        # batch dims take the longest divisible prefix of the dp axes
+        bdim = shape[1] if len(shape) >= 4 or name == "cross_kvs" else shape[0]
+        if name == "positions" and len(shape) == 3:
+            bdim = shape[1]
+        bspec = _longest_divisible(dp, bdim, mesh) if dp else None
+        cache_tp = None if tp_in_dp else "model"
+        raw = None
+        if "caches" in keys or name in ("k", "v", "state", "conv"):
+            if name in ("k", "v"):            # (L, B, C, KV, hd)
+                raw = (None, bspec, cache_tp, None, None)
+            elif name == "state":             # (L, B, nH, P, N)
+                raw = (None, bspec, cache_tp, None, None)
+            elif name == "conv":              # (L, B, K-1, ch) mixed channels
+                raw = (None, bspec, None, None)
+        if raw is None and (name == "cross_kvs" or len(shape) == 5):
+            raw = (None, bspec, cache_tp, None, None)    # (L,B,T,KV,hd)
+        if raw is None and name == "positions" and len(shape) == 3:
+            raw = (None, bspec, None)                    # mrope (3, B, S)
+        if raw is None and len(shape) == 3:
+            raw = (bspec, None, None)                    # embeds (B, S, d)
+        if raw is None and len(shape) == 2:
+            raw = (bspec, None)                          # tokens/targets
+        if raw is None:
+            return P()
+        return P(*_divisible(raw, shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(spec, batch)
+
+
+def batch_shardings(batch: Any, mesh: Mesh,
+                    dp_axes: tuple[str, ...] | None = None) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        batch_specs(batch, mesh, dp_axes))
+
+
+def make_hint(mesh: Mesh | None, dp_axes: tuple[str, ...]):
+    """Activation sharding-constraint helper.
+
+    FSDP shards each weight's contraction dim over ``data`` — the same axis
+    that shards the batch.  Without explicit activation constraints GSPMD may
+    resolve the conflict by un-sharding the *activations* (measured: 4 GiB
+    replicated rope buffers per device, EXPERIMENTS.md §Perf).  ``hint(x,
+    *tail)`` pins ``x`` to P(dp, None, *tail) so the (small) weights get
+    gathered instead.
+    """
+    if mesh is None or mesh.devices.size == 1:
+        return lambda x, *tail: x
+    dp = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None)
+
+    def hint(x, *tail):
+        # in the pure-FSDP profile the tensor axis belongs to dp — drop it
+        # from feature-dim tails (an axis cannot appear twice in a spec)
+        tail = tuple(None if (t is not None and t in dp_axes) else t
+                     for t in tail)
+        bdim = x.shape[0]
+        d = dp
+        if isinstance(dp, tuple):
+            size = 1
+            keep = []
+            for a in dp:
+                if bdim % (size * mesh.shape[a]) == 0:
+                    keep.append(a)
+                    size *= mesh.shape[a]
+                else:
+                    break
+            d = tuple(keep) if len(keep) > 1 else (keep[0] if keep else None)
+        elif dp is not None and bdim % mesh.shape[dp]:
+            d = None
+        spec = P(d, *((None,) * (x.ndim - 1 - len(tail))), *tail)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return hint
+
+
+def opt_state_specs(opt_state, params_spec) -> Any:
+    """AdamWState(step, m, v): moments shard like params."""
+    from repro.optim.adamw import AdamWState
+    return AdamWState(step=P(), m=params_spec, v=params_spec)

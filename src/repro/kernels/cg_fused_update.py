@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: CG-NB's fused Tk1&2 (+Tk2's reduction partial).
+
+Alg. 1 lines 6-8 share all their operands, so the paper assigns them to
+adjacent tasks; the TPU analogue is a single VMEM pass computing
+
+    Ap_new = Ar + β·Ap
+    p_new  = r  + β·p
+    α_d    = Σ Ap_new · p_new        (partial, reduced outside)
+
+One read of {r, Ar, p, Ap} + one write of {p_new, Ap_new} instead of three
+separate kernels (two axpbys + a dot) costing 6 reads + 2 writes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.fused_axpby import ROW, _to_2d
+
+
+def _kernel(*refs):
+    coef, r, ar, p, ap, p_out, ap_out, acc = refs
+    beta = coef[0, 0]
+    p_new = r[...] + beta * p[...]
+    ap_new = ar[...] + beta * ap[...]
+    p_out[...] = p_new
+    ap_out[...] = ap_new
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc[0, 0] = jnp.zeros((), acc.dtype)
+
+    acc[0, 0] += jnp.sum(ap_new * p_new).astype(acc.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("br", "interpret"))
+def cg_fused_update(
+    beta: jax.Array,
+    r: jax.Array,
+    ar: jax.Array,
+    p: jax.Array,
+    ap: jax.Array,
+    *,
+    br: int = 256,
+    interpret: bool = True,
+):
+    """Returns ``(p_new, Ap_new, partial_dot)``."""
+    shape = r.shape
+    r2, n = _to_2d(r)
+    ar2, _ = _to_2d(ar)
+    p2, _ = _to_2d(p)
+    ap2, _ = _to_2d(ap)
+    rows = r2.shape[0]
+    brr = min(br, rows)
+    while rows % brr:
+        brr -= 1
+    acc_dtype = jnp.float32 if r.dtype == jnp.bfloat16 else r.dtype
+    coef = beta.astype(r.dtype).reshape(1, 1)
+    blk = lambda: pl.BlockSpec((brr, ROW), lambda i: (i, 0))
+    p_new, ap_new, acc = pl.pallas_call(
+        _kernel,
+        grid=(rows // brr,),
+        in_specs=[pl.BlockSpec((1, 1), lambda i: (0, 0)), blk(), blk(), blk(), blk()],
+        out_specs=[blk(), blk(), pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        out_shape=[
+            jax.ShapeDtypeStruct(r2.shape, r.dtype),
+            jax.ShapeDtypeStruct(r2.shape, r.dtype),
+            jax.ShapeDtypeStruct((1, 1), acc_dtype),
+        ],
+        interpret=interpret,
+    )(coef, r2, ar2, p2, ap2)
+    return (
+        p_new.reshape(-1)[:n].reshape(shape),
+        ap_new.reshape(-1)[:n].reshape(shape),
+        acc[0, 0],
+    )

@@ -1,0 +1,72 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+On a TPU backend the kernels compile natively; everywhere else they run in
+``interpret=True`` mode (the kernel body executed op-by-op on CPU), which is
+how this repo validates them.  ``use_pallas=False`` falls back to the jnp
+oracle — the solvers take a ``matvec_padded`` hook, so the whole solver suite
+can run on either implementation (tests assert they agree).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.core.operators import Stencil
+from repro.kernels import ref
+from repro.kernels.cg_fused_update import cg_fused_update as _cg_fused_update
+from repro.kernels.fused_axpby import (
+    fused_axpby as _fused_axpby,
+    fused_axpby_dot as _fused_axpby_dot,
+)
+from repro.kernels.flash_attention import flash_attention as _flash_attention
+from repro.kernels.rb_gs import rb_gs_half_sweep as _rb_gs_half_sweep
+from repro.kernels.stencil_spmv import stencil_spmv as _stencil_spmv
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def spmv(xp: jax.Array, stencil: Stencil, *, bz: int = 8) -> jax.Array:
+    return _stencil_spmv(xp, stencil=stencil, bz=bz, interpret=_interpret())
+
+
+def spmv_dot(xp: jax.Array, stencil: Stencil, *, bz: int = 8):
+    return _stencil_spmv(
+        xp, stencil=stencil, bz=bz, fuse_dot=True, interpret=_interpret()
+    )
+
+
+def axpbypcz(a, x, b, y, c, z):
+    return _fused_axpby(a, x, b, y, c, z, interpret=_interpret())
+
+
+def axpbypcz_dot(a, x, b, y, c, z, w):
+    return _fused_axpby_dot(a, x, b, y, c, z, w, interpret=_interpret())
+
+
+def cg_update(beta, r, ar, p, ap):
+    return _cg_fused_update(beta, r, ar, p, ap, interpret=_interpret())
+
+
+def gs_half_sweep(xp, b, stencil: Stencil, colour: int, *, bz: int = 8):
+    return _rb_gs_half_sweep(
+        xp, b, stencil=stencil, colour=colour, bz=bz, interpret=_interpret()
+    )
+
+
+def flash_attention(q, k, v, *, bq: int = 256, bkv: int = 256,
+                    window: int = 0):
+    return _flash_attention(q, k, v, bq=bq, bkv=bkv, window=window,
+                            interpret=_interpret())
+
+
+def make_matvec_padded(stencil: Stencil, *, bz: int = 8):
+    """A ``matvec_padded`` hook (for LocalOp/DistributedOp) backed by Pallas."""
+
+    def mv(xp: jax.Array) -> jax.Array:
+        return spmv(xp, stencil, bz=bz)
+
+    return mv

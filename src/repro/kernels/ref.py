@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.operators import Stencil
+
+
+def stencil_spmv_ref(xp: jax.Array, *, stencil: Stencil) -> jax.Array:
+    return stencil.matvec_padded(xp)
+
+
+def stencil_spmv_dot_ref(xp: jax.Array, *, stencil: Stencil):
+    y = stencil.matvec_padded(xp)
+    x = xp[1:-1, 1:-1, 1:-1]
+    acc_dtype = jnp.float32 if xp.dtype == jnp.bfloat16 else xp.dtype
+    return y, jnp.sum(y.astype(acc_dtype) * x.astype(acc_dtype))
+
+
+def fused_axpby_ref(a, x, b, y, c, z):
+    return a * x + b * y + c * z
+
+
+def fused_axpby_dot_ref(a, x, b, y, c, z, w):
+    out = a * x + b * y + c * z
+    acc_dtype = jnp.float32 if x.dtype == jnp.bfloat16 else x.dtype
+    return out, jnp.vdot(out.astype(acc_dtype), w.astype(acc_dtype))
+
+
+def cg_fused_update_ref(beta, r, ar, p, ap):
+    p_new = r + beta * p
+    ap_new = ar + beta * ap
+    acc_dtype = jnp.float32 if r.dtype == jnp.bfloat16 else r.dtype
+    return p_new, ap_new, jnp.vdot(ap_new.astype(acc_dtype), p_new.astype(acc_dtype))
+
+
+def flash_attention_ref(q, k, v, *, window: int = 0):
+    """Causal softmax attention, full-matrix form (q/k/v: (B,S,H,hd))."""
+    B, S, H, hd = q.shape
+    logits = jnp.einsum("bshn,bthn->bhst", q, k).astype(jnp.float32)
+    logits *= hd ** -0.5
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(S)[None, :]
+    mask = kp <= qp
+    if window:
+        mask &= kp > (qp - window)
+    logits = jnp.where(mask[None, None], logits, -2.3819763e38)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhst,bthn->bshn", w, v)
+
+
+def rb_gs_half_sweep_ref(xp: jax.Array, b: jax.Array, *, stencil: Stencil, colour: int):
+    x = xp[1:-1, 1:-1, 1:-1]
+    off = stencil.offdiag_apply_padded(xp)
+    gs = (b - off) / stencil.diag
+    i = jax.lax.broadcasted_iota(jnp.int32, b.shape, 0)
+    j = jax.lax.broadcasted_iota(jnp.int32, b.shape, 1)
+    k = jax.lax.broadcasted_iota(jnp.int32, b.shape, 2)
+    mask = ((i + j + k) % 2) == colour
+    return jnp.where(mask, gs, x)

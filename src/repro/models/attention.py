@@ -1,0 +1,295 @@
+"""GQA attention: RoPE/M-RoPE, QKV bias, QK-norm, softcap, sliding window,
+unified full/rolling KV cache for prefill+decode.
+
+Cache layout (per layer): ``k``/``v``: (B, C, KV, hd), ``pos``: (C,) int32 —
+the absolute position held in each slot (-1 = empty).  ``C`` equals the max
+sequence length for full attention or the sliding window for local layers;
+decode writes slot ``pos % C``, which makes the same code path serve both.
+RoPE is applied *before* caching, so rolling slots stay correct.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import NEG_INF, apply_mrope, apply_rope, rms_norm, softcap
+
+
+def init_attn_params(key, cfg: ArchConfig, dtype) -> dict:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    scale = d ** -0.5
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, H * hd), jnp.float32) * scale).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d, KV * hd), jnp.float32) * scale).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d, KV * hd), jnp.float32) * scale).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (H * hd, d), jnp.float32) * (H * hd) ** -0.5).astype(dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((KV * hd,), dtype)
+        p["bv"] = jnp.zeros((KV * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def init_attn_cache(cfg: ArchConfig, batch: int, cache_len: int, window: int,
+                    dtype) -> dict:
+    C = min(cache_len, window) if window else cache_len
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((batch, C, KV, hd), dtype),
+        "v": jnp.zeros((batch, C, KV, hd), dtype),
+        "pos": jnp.full((C,), -1, jnp.int32),
+    }
+
+
+def _no_hint(x, *tail):
+    return x
+
+
+def _project_qkv(p, cfg: ArchConfig, x, positions, hint=_no_hint,
+                 q_heads_sharded: bool = True):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    # pin batch sharding (see distributed.sharding.make_hint): q head-sharded
+    # over the tensor axis, k/v replicated over it (GQA repeat form).  Decode
+    # passes q_heads_sharded=False: there the KV *cache* is sharded over the
+    # tensor axis (cache-sequence-parallel attention) and a head-sharded q
+    # would force GSPMD to all-gather the cache (~0.5 GiB/layer measured) —
+    # replicating the (B,1,H,hd) q costs ~1 MiB instead.
+    q = q.reshape(B, S, H, hd)
+    q = hint(q, "model", None) if q_heads_sharded else hint(q)
+    # MHA (KV == H): shard K/V on heads like Q — replicating them over the
+    # tensor axis costs tp-times-redundant projections (measured: minicpm's
+    # useful-compute 0.30 vs 0.6+ for GQA archs).  GQA keeps K/V replicated
+    # (the repeat form, see _sdpa).
+    kv_tail = ("model", None) if (KV == H and q_heads_sharded) else ()
+    k = hint(k.reshape(B, S, KV, hd), *kv_tail)
+    v = hint(v.reshape(B, S, KV, hd), *kv_tail)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.mrope:
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(cfg: ArchConfig, q, k, v, mask, hint=_no_hint,
+          kv_seq_sharded: bool = False):
+    """q: (B,S,H,hd), k/v: (B,T,KV,hd), mask: broadcastable to (B,H,S,T).
+
+    GQA is computed by repeating K/V to the full head count rather than
+    reshaping Q into (KV, G, hd): the latter splits the tensor-sharded head
+    dim fractionally (e.g. KV=8 over tp=16) and forces GSPMD to replicate the
+    (S×T) logits — measured at ~34 GiB/device on the train_4k cells.  With
+    the repeat form, Q stays head-sharded, K/V stay replicated over the
+    tensor axis (their projections are small), and the logits shard by head.
+
+    ``kv_seq_sharded`` is the decode path: the KV *cache*'s sequence dim is
+    tensor-sharded and must STAY sharded through the repeat/einsum (left
+    unconstrained, GSPMD re-shards the cache onto heads — a full 8 GiB
+    gather per layer, measured) — the softmax then runs distributed over T
+    (psum'd max/denominator, a few KB) and the output psums once.
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    if KV != H:
+        k = jnp.repeat(k, H // KV, axis=2)
+        v = jnp.repeat(v, H // KV, axis=2)
+    if kv_seq_sharded:
+        k = hint(k, "model", None, None)
+        v = hint(v, "model", None, None)
+    logits = jnp.einsum("bshn,bthn->bhst", q, k).astype(jnp.float32)
+    if kv_seq_sharded:
+        logits = hint(logits, None, "model")
+    logits *= hd ** -0.5
+    if cfg.attn_softcap:
+        logits = softcap(logits, cfg.attn_softcap)
+    logits = jnp.where(mask, logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    if kv_seq_sharded:
+        w = hint(w, None, "model")
+    out = jnp.einsum("bhst,bthn->bshn", w, v)
+    if kv_seq_sharded:
+        out = hint(out)
+    return out.reshape(B, S, H * hd)
+
+
+#: sequences longer than this use the chunked online-softmax path
+CHUNKED_ATTN_THRESHOLD = 2048
+
+
+def _chunked_sdpa(cfg: ArchConfig, q, k, v, *, window: int,
+                  n_q_chunks: int = 8, kv_chunk: int = 1024):
+    """Flash-style causal attention: online softmax over KV blocks.
+
+    Never materialises the (S, S) logits (measured 12.9 GiB/device at the
+    qwen2.5-32b train_4k cell).  The query dim is split into a static Python
+    loop (so each q-chunk's KV scan has a *static* causal upper bound — no
+    wasted upper-triangle block compute) and KV blocks stream through a
+    ``lax.scan`` with running (max, denom, acc) in f32.  Sliding windows also
+    bound the scan from below (gemma2 local layers touch only w/kv_chunk
+    blocks).  On real TPU this is the splash-kernel slot; the pure-JAX form
+    keeps the same blocking so the roofline accounting carries over.
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    if KV != H:
+        k = jnp.repeat(k, H // KV, axis=2)
+        v = jnp.repeat(v, H // KV, axis=2)
+    q_chunk = S // n_q_chunks
+    while S % q_chunk:
+        q_chunk -= 1
+    kv_chunk = min(kv_chunk, S)
+    while S % kv_chunk:
+        kv_chunk -= 1
+    scale = hd ** -0.5
+    outs = []
+    for qi in range(S // q_chunk):
+        q0 = qi * q_chunk
+        q_i = q[:, q0: q0 + q_chunk]                       # (B,bq,H,hd)
+        hi = (q0 + q_chunk - 1) // kv_chunk                # last causal block
+        lo = 0 if not window else max(0, (q0 - window + 1) // kv_chunk)
+        nblk = hi + 1 - lo
+        k_s = k[:, lo * kv_chunk: (hi + 1) * kv_chunk].reshape(
+            B, nblk, kv_chunk, H, hd).swapaxes(0, 1)
+        v_s = v[:, lo * kv_chunk: (hi + 1) * kv_chunk].reshape(
+            B, nblk, kv_chunk, H, hd).swapaxes(0, 1)
+        blk_ids = jnp.arange(lo, hi + 1)
+        q_idx = q0 + jnp.arange(q_chunk)
+
+        def body(carry, inp):
+            m, l, acc = carry
+            kj, k_b, v_b = inp
+            s = jnp.einsum("bqhn,bkhn->bhqk", q_i, k_b).astype(jnp.float32)
+            s = s * scale
+            if cfg.attn_softcap:
+                s = softcap(s, cfg.attn_softcap)
+            k_idx = kj * kv_chunk + jnp.arange(kv_chunk)
+            msk = k_idx[None, :] <= q_idx[:, None]
+            if window:
+                msk &= k_idx[None, :] > (q_idx[:, None] - window)
+            s = jnp.where(msk[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p_ = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p_, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bkhn->bhqn", p_.astype(v_b.dtype), v_b).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, H, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, H, q_chunk, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (blk_ids, k_s, v_s))
+        o = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        outs.append(o.swapaxes(1, 2))                      # (B,bq,H,hd)
+    out = jnp.concatenate(outs, axis=1)
+    return out.reshape(B, S, H * hd)
+
+
+def attn_forward(p, cfg: ArchConfig, x, positions, *, window: int = 0,
+                 hint=_no_hint):
+    """Full-sequence causal attention (train / prefill)."""
+    q, k, v = _project_qkv(p, cfg, x, positions, hint)
+    S = x.shape[1]
+    if S > CHUNKED_ATTN_THRESHOLD:
+        out = hint(_chunked_sdpa(cfg, q, k, v, window=window), "model")
+    else:
+        q_pos = jnp.arange(S)[:, None]
+        k_pos = jnp.arange(S)[None, :]
+        mask = k_pos <= q_pos
+        if window:
+            mask &= k_pos > (q_pos - window)
+        out = hint(_sdpa(cfg, q, k, v, mask[None, None]), "model")
+    return out @ p["wo"], (k, v)
+
+
+def prefill_cache(cfg: ArchConfig, k, v, *, cache_len: int, window: int, dtype):
+    """Build the decode cache from prefill k/v (take the last C positions)."""
+    B, S = k.shape[0], k.shape[1]
+    C = min(cache_len, window) if window else cache_len
+    take = min(S, C)
+    ks = k[:, S - take:].astype(dtype)
+    vs = v[:, S - take:].astype(dtype)
+    pos_abs = jnp.arange(S - take, S, dtype=jnp.int32)
+    cache = init_attn_cache(cfg, B, cache_len, window, dtype)
+    slots = pos_abs % C
+    cache["k"] = cache["k"].at[:, slots].set(ks)
+    cache["v"] = cache["v"].at[:, slots].set(vs)
+    cache["pos"] = cache["pos"].at[slots].set(pos_abs)
+    return cache
+
+
+def attn_decode(p, cfg: ArchConfig, x, cur_pos, cache, *, window: int = 0,
+                hint=_no_hint):
+    """One-token decode. x: (B, 1, d); cur_pos: () int32 absolute position."""
+    B = x.shape[0]
+    positions = jnp.full((B, 1), cur_pos, jnp.int32)
+    if cfg.mrope:
+        positions = jnp.broadcast_to(positions[None], (3, B, 1))
+    q, k, v = _project_qkv(p, cfg, x, positions, hint, q_heads_sharded=False)
+    C = cache["k"].shape[1]
+    slot = cur_pos % C
+    # where-mask update instead of dynamic_update_slice: a dynamic scatter
+    # into the tensor-sharded cache dim makes GSPMD gather the whole cache
+    # (measured ~6 GB/layer/device at decode_32k); the masked select is
+    # fully local on every shard.
+    sel = jnp.arange(C, dtype=jnp.int32) == slot.astype(jnp.int32)
+    k_cache = jnp.where(sel[None, :, None, None],
+                        k.astype(cache["k"].dtype), cache["k"])
+    v_cache = jnp.where(sel[None, :, None, None],
+                        v.astype(cache["v"].dtype), cache["v"])
+    pos_arr = jnp.where(sel, cur_pos.astype(jnp.int32), cache["pos"])
+    valid = (pos_arr >= 0) & (pos_arr <= cur_pos)
+    if window:
+        valid &= pos_arr > (cur_pos - window)
+    mask = valid[None, None, None, :]  # (1,1,1,C) -> broadcast (B,H,1,C)
+    out = _sdpa(cfg, q, k_cache, v_cache, mask, hint, kv_seq_sharded=True)
+    new_cache = {"k": hint(k_cache, "model", None, None),
+                 "v": hint(v_cache, "model", None, None),
+                 "pos": pos_arr}
+    return out @ p["wo"], new_cache
+
+
+# --- cross attention (enc-dec) -----------------------------------------------
+
+def init_cross_params(key, cfg: ArchConfig, dtype) -> dict:
+    return init_attn_params(key, cfg, dtype)
+
+
+def cross_forward(p, cfg: ArchConfig, x, enc_kv):
+    """x: (B,S,d); enc_kv: (k, v) each (B,T,KV,hd) precomputed from encoder."""
+    B, S, _ = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    q = x @ p["wq"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    q = q.reshape(B, S, H, hd)
+    k, v = enc_kv
+    out = _sdpa(cfg, q, k, v, jnp.ones((1, 1, 1, 1), bool))
+    return out @ p["wo"]
+
+
+def cross_kv(p, cfg: ArchConfig, enc_out):
+    B, T, _ = enc_out.shape
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    k = enc_out @ p["wk"]
+    v = enc_out @ p["wv"]
+    if cfg.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    return k.reshape(B, T, KV, hd), v.reshape(B, T, KV, hd)

@@ -1,0 +1,112 @@
+"""Shared model components: norms, RoPE/M-RoPE, initialisers, masks."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6,
+             offset: float = 0.0) -> jax.Array:
+    """RMSNorm: variance in f32, application in the input dtype.
+
+    Upcasting the whole tensor to f32 makes XLA hoist a full-precision copy
+    of every saved residual out of the backward scan (measured 12 GiB/device,
+    EXPERIMENTS.md §Perf) — only the reduction needs f32.
+    """
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    r = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * r * (offset + scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def softcap(logits: jax.Array, cap: float) -> jax.Array:
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    if not cap:
+        return logits
+    return cap * jnp.tanh(logits / cap)
+
+
+# -----------------------------------------------------------------------------
+# Rotary embeddings
+# -----------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float, dtype=jnp.float32) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=dtype) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array, positions: jax.Array, theta: float, sections: tuple[int, ...]
+) -> jax.Array:
+    """Qwen2-VL multimodal RoPE.
+
+    ``positions``: (3, B, S) — temporal/height/width position ids; the rotary
+    half-dim is split into ``sections`` (e.g. (16, 24, 24) for head_dim 128),
+    each section rotated by its own position stream.  For pure text the three
+    streams are identical and M-RoPE reduces to RoPE.
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(x.shape[-1], theta)  # (half,)
+    # per-section position selection
+    sec_id = jnp.repeat(
+        jnp.arange(len(sections)), jnp.array(sections), total_repeat_length=half
+    )  # (half,) static
+    pos = jnp.take(positions, sec_id, axis=0)          # (half, B, S)
+    pos = jnp.moveaxis(pos, 0, -1)                     # (B, S, half)
+    ang = pos.astype(jnp.float32) * freqs
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -----------------------------------------------------------------------------
+# Masks
+# -----------------------------------------------------------------------------
+
+NEG_INF = -2.3819763e38  # as used by flax/maxtext for bf16-safe masking
+
+
+def causal_mask(q_len: int, kv_len: int, *, q_offset=0,
+                window: int = 0) -> jax.Array:
+    """(q_len, kv_len) boolean mask; True = attend.
+
+    ``q_offset`` is the absolute position of query 0 (decode: cache length).
+    ``window`` > 0 restricts to a sliding window of that many positions.
+    """
+    q_pos = jnp.arange(q_len)[:, None] + q_offset
+    k_pos = jnp.arange(kv_len)[None, :]
+    m = k_pos <= q_pos
+    if window:
+        m &= k_pos > (q_pos - window)
+    return m
+
+
+# -----------------------------------------------------------------------------
+# Initialisation
+# -----------------------------------------------------------------------------
+
+def dense_init(key, shape, in_axis_size, dtype) -> jax.Array:
+    scale = 1.0 / jnp.sqrt(in_axis_size)
+    return (jax.random.uniform(key, shape, jnp.float32, -1.0, 1.0) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype) -> jax.Array:
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)

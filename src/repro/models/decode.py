@@ -1,0 +1,192 @@
+"""Autoregressive decode: per-layer KV/SSM caches, one-token steps.
+
+Cache pytrees are stacked along the layer axis and scanned together with the
+stacked params; heterogeneous layer schedules (gemma2 local/global, llama4
+dense/moe super-layers) use grouped stacking so every scan leaf is uniform.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import make_hint
+from repro.models import attention as attn_mod
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import rms_norm
+from repro.models.transformer import (
+    ModelCtx,
+    _maybe_post,
+    _window_flags,
+    embed_tokens,
+    layer_kind,
+    logits_from_h,
+)
+
+
+# =============================================================================
+# Cache init
+# =============================================================================
+
+def _stack_attn_caches(cfg, n, batch, cache_len, window, dtype):
+    one = attn_mod.init_attn_cache(cfg, batch, cache_len, window, dtype)
+    return jax.tree.map(lambda x: jnp.broadcast_to(x, (n, *x.shape)), one)
+
+
+def _stack_ssm_caches(cfg, n, batch, dtype):
+    one = ssm_mod.init_ssm_cache(cfg, batch, dtype)
+    return jax.tree.map(lambda x: jnp.broadcast_to(x, (n, *x.shape)), one)
+
+
+def init_caches(ctx: ModelCtx, batch: int, cache_len: int) -> dict:
+    cfg = ctx.cfg
+    L, dt = cfg.n_layers, ctx.dtype
+    kind = layer_kind(cfg)
+    if kind == "ssm":
+        return {"ssm": _stack_ssm_caches(cfg, L, batch, dt)}
+    if cfg.family == "moe" and cfg.moe_every == 2:
+        n = L // 2
+        return {
+            "dense": _stack_attn_caches(cfg, n, batch, cache_len, 0, dt),
+            "moe": _stack_attn_caches(cfg, n, batch, cache_len, 0, dt),
+        }
+    if cfg.local_global:
+        n = L // 2
+        return {
+            "even": _stack_attn_caches(cfg, n, batch, cache_len,
+                                       cfg.sliding_window, dt),
+            "odd": _stack_attn_caches(cfg, n, batch, cache_len, 0, dt),
+        }
+    caches = {"attn": _stack_attn_caches(cfg, L, batch, cache_len,
+                                         cfg.sliding_window, dt)}
+    if kind == "hybrid":
+        caches["ssm"] = _stack_ssm_caches(cfg, L, batch, dt)
+    return caches
+
+
+# =============================================================================
+# One-token layer step
+# =============================================================================
+
+def _decode_layer(ctx: ModelCtx, p, h, cur_pos, cache, *, window: int,
+                  kind: str, cross_kv=None):
+    cfg = ctx.cfg
+    hint = make_hint(ctx.mesh, ctx.dp_axes)
+    new_cache = {}
+    if kind == "ssm":
+        x = rms_norm(h, p["norm_attn"], cfg.norm_eps)
+        y, new_ssm = ssm_mod.ssm_decode(p["ssm"], cfg, x, cache["ssm"], hint)
+        return h + cfg.residual_scale * y, {"ssm": new_ssm}
+    x = rms_norm(h, p["norm_attn"], cfg.norm_eps)
+    a, new_attn = attn_mod.attn_decode(p["attn"], cfg, x, cur_pos,
+                                       cache["attn"], window=window, hint=hint)
+    new_cache["attn"] = new_attn
+    if kind == "hybrid":
+        s, new_ssm = ssm_mod.ssm_decode(p["ssm"], cfg, x, cache["ssm"], hint)
+        a = 0.5 * (rms_norm(a, p["fuse_norm_attn"], cfg.norm_eps)
+                   + rms_norm(s, p["fuse_norm_ssm"], cfg.norm_eps))
+        new_cache["ssm"] = new_ssm
+    h = h + cfg.residual_scale * _maybe_post(cfg, p, "post_norm_attn", a)
+    if cross_kv is not None:
+        c = attn_mod.cross_forward(
+            p["cross"], cfg, rms_norm(h, p["norm_cross"], cfg.norm_eps), cross_kv)
+        h = h + cfg.residual_scale * hint(c)
+    x = rms_norm(h, p["norm_mlp"], cfg.norm_eps)
+    if kind == "moe":
+        m, _ = moe_mod.moe_forward(p["moe"], cfg, x, ctx.mesh, ctx.dp_axes,
+                                   ctx.tp_axis)
+    else:
+        m = mlp_mod.mlp_forward(p["mlp"], cfg, x, hint)
+    h = h + cfg.residual_scale * _maybe_post(cfg, p, "post_norm_mlp", m)
+    return h, new_cache
+
+
+# =============================================================================
+# Full decode step
+# =============================================================================
+
+def decode_step(ctx: ModelCtx, params, tokens, cur_pos, caches,
+                cross_kvs=None):
+    """tokens: (B, 1); cur_pos: () int32. Returns (logits, new_caches)."""
+    cfg = ctx.cfg
+    h = embed_tokens(ctx, params, tokens)
+    kind = layer_kind(cfg)
+
+    if cfg.family == "moe" and cfg.moe_every == 2:
+        def f(h, xs):
+            p2, c2 = xs
+            h, cd = _decode_layer(ctx, p2["dense"], h, cur_pos,
+                                  {"attn": c2["dense"]}, window=0, kind="dense")
+            h, cm = _decode_layer(ctx, p2["moe"], h, cur_pos,
+                                  {"attn": c2["moe"]}, window=0, kind="moe")
+            return h, {"dense": cd["attn"], "moe": cm["attn"]}
+        h, new_caches = lax.scan(f, h, (params["layers"], caches))
+    elif cfg.local_global:
+        L = cfg.n_layers
+        tree = jax.tree.map(
+            lambda x: x.reshape(2, L // 2, *x.shape[1:]).swapaxes(0, 1),
+            params["layers"])
+
+        def f(h, xs):
+            p2, c2 = xs
+            p_even = jax.tree.map(lambda x: x[0], p2)
+            p_odd = jax.tree.map(lambda x: x[1], p2)
+            h, ce = _decode_layer(ctx, p_even, h, cur_pos,
+                                  {"attn": c2["even"]},
+                                  window=cfg.sliding_window, kind="dense")
+            h, co = _decode_layer(ctx, p_odd, h, cur_pos,
+                                  {"attn": c2["odd"]}, window=0, kind="dense")
+            return h, {"even": ce["attn"], "odd": co["attn"]}
+        h, new_caches = lax.scan(f, h, (tree, caches))
+    elif cfg.enc_dec:
+        def f(h, xs):
+            p, c2, ckv = xs
+            h, nc = _decode_layer(ctx, p, h, cur_pos, {"attn": c2["attn"]},
+                                  window=0, kind="dense", cross_kv=ckv)
+            return h, {"attn": nc["attn"]}
+        h, new_caches = lax.scan(f, h, (params["layers"], caches, cross_kvs))
+    else:
+        window = cfg.sliding_window
+
+        def f(h, xs):
+            p, c = xs
+            h, nc = _decode_layer(ctx, p, h, cur_pos, c, window=window,
+                                  kind=kind)
+            return h, nc
+        h, new_caches = lax.scan(f, h, (params["layers"], caches))
+
+    logits = logits_from_h(ctx, params, h)
+    return logits, new_caches
+
+
+# =============================================================================
+# Prefill -> caches
+# =============================================================================
+
+def caches_from_prefill(ctx: ModelCtx, kvs, cache_len: int) -> dict:
+    """Transform forward(collect_kv=True) stacked (k, v) into decode caches."""
+    cfg = ctx.cfg
+    dt = ctx.dtype
+
+    def build(kv, window):
+        k, v = kv  # (n, B, S, KV, hd)
+        return jax.vmap(
+            lambda kk, vv: attn_mod.prefill_cache(
+                cfg, kk, vv, cache_len=cache_len, window=window, dtype=dt)
+        )(k, v)
+
+    if cfg.family == "moe" and cfg.moe_every == 2:
+        kv0, kv1 = kvs
+        return {"dense": build(kv0, 0), "moe": build(kv1, 0)}
+    if cfg.local_global:
+        kv0, kv1 = kvs
+        return {"even": build(kv0, cfg.sliding_window), "odd": build(kv1, 0)}
+    if cfg.enc_dec:
+        kv_self, kv_cross = kvs
+        return {"attn": build(kv_self, 0)}, kv_cross
+    caches = {"attn": build(kvs, cfg.sliding_window)}
+    return caches

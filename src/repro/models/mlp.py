@@ -1,0 +1,27 @@
+"""Gated MLP (SwiGLU / GeGLU)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+def _act(name: str):
+    return jax.nn.silu if name == "silu" else jax.nn.gelu
+
+
+def init_mlp_params(key, d: int, ff: int, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_in": (jax.random.normal(k1, (d, 2 * ff), jnp.float32) * d ** -0.5).astype(dtype),
+        "w_out": (jax.random.normal(k2, (ff, d), jnp.float32) * ff ** -0.5).astype(dtype),
+    }
+
+
+def mlp_forward(p, cfg: ArchConfig, x, hint=lambda x, *t: x):
+    ff = p["w_out"].shape[-2]
+    h = hint(x @ p["w_in"], "model")
+    gate, up = h[..., :ff], h[..., ff:]
+    return (_act(cfg.act)(gate) * up) @ p["w_out"]

@@ -1,0 +1,185 @@
+"""Mamba-2 SSD (state-space duality) block — chunked, MXU-friendly.
+
+The chunked algorithm turns the linear recurrence into per-chunk matmuls
+(the "duality"): within a chunk an attention-like (Q×Q) product, across
+chunks a small state carry — structurally the same blocking the solver layer
+uses for plane sweeps (fresh within a block, carried state across blocks).
+
+Tensor-parallel layout: the z/x projections and all head-indexed tensors are
+sharded over the model axis (d_inner and n_heads are head-aligned: e.g.
+mamba2-780m has 48 SSD heads over 16 shards = 3 heads/shard); the small
+B/C/dt projections are replicated.  The projections are kept as SEPARATE
+weights (not mamba's fused in_proj) precisely so each piece shards cleanly —
+a fused (d, 2·d_inner+2N+nH) output cannot be split 16 ways on head
+boundaries (DESIGN.md §5).
+
+All SSD internals run in f32 (exp/cumsum of negative decays is
+well-conditioned: every exponent is <= 0 by construction).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models.common import rms_norm
+
+
+def _no_hint(x, *tail):
+    return x
+
+
+def init_ssm_params(key, cfg: ArchConfig, dtype) -> dict:
+    d = cfg.d_model
+    di, N, nH, K = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.conv_kernel
+    ks = jax.random.split(key, 8)
+    dt = jnp.exp(jax.random.uniform(ks[6], (nH,), jnp.float32) *
+                 (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))
+    s = d ** -0.5
+    return {
+        "w_z": (jax.random.normal(ks[0], (d, di), jnp.float32) * s).astype(dtype),
+        "w_x": (jax.random.normal(ks[1], (d, di), jnp.float32) * s).astype(dtype),
+        "w_B": (jax.random.normal(ks[2], (d, N), jnp.float32) * s).astype(dtype),
+        "w_C": (jax.random.normal(ks[3], (d, N), jnp.float32) * s).astype(dtype),
+        "w_dt": (jax.random.normal(ks[4], (d, nH), jnp.float32) * s).astype(dtype),
+        "conv_x": (jax.random.normal(ks[5], (K, di), jnp.float32)
+                   * K ** -0.5).astype(dtype),
+        "conv_B": (jax.random.normal(ks[5], (K, N), jnp.float32)
+                   * K ** -0.5).astype(dtype),
+        "conv_C": (jax.random.normal(ks[5], (K, N), jnp.float32)
+                   * K ** -0.5).astype(dtype),
+        "conv_bx": jnp.zeros((di,), dtype),
+        "conv_bB": jnp.zeros((N,), dtype),
+        "conv_bC": jnp.zeros((N,), dtype),
+        "A_log": jnp.log(jnp.arange(1, nH + 1, dtype=jnp.float32)),
+        "D": jnp.ones((nH,), jnp.float32),
+        "dt_bias": (dt + jnp.log(-jnp.expm1(-dt))).astype(jnp.float32),
+        "norm": jnp.ones((di,), dtype),
+        "out_proj": (jax.random.normal(ks[7], (di, d), jnp.float32)
+                     * di ** -0.5).astype(dtype),
+    }
+
+
+def init_ssm_cache(cfg: ArchConfig, batch: int, dtype) -> dict:
+    di, N, nH, K = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.conv_kernel
+    P_ = cfg.ssm_head_dim
+    return {
+        "conv": jnp.zeros((batch, K - 1, di + 2 * N), dtype),
+        "state": jnp.zeros((batch, nH, P_, N), jnp.float32),
+    }
+
+
+def _causal_conv(u, w, b):
+    """Depthwise causal conv, kernel K (unrolled shifted adds — K is tiny)."""
+    K = w.shape[0]
+    S = u.shape[1]
+    pad = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    y = sum(pad[:, k: k + S] * w[k] for k in range(K))
+    return jax.nn.silu(y + b)
+
+
+def _projections(p, cfg, x, hint):
+    """Returns z, x_conv, B_conv, C_conv, dt (pre-softplus) + raw convs."""
+    z = hint(x @ p["w_z"], "model")
+    xr = hint(x @ p["w_x"], "model")
+    Br = hint(x @ p["w_B"])
+    Cr = hint(x @ p["w_C"])
+    dt = hint(x @ p["w_dt"], "model")
+    return z, xr, Br, Cr, dt
+
+
+def ssm_forward(p, cfg: ArchConfig, x, *, return_cache: bool = False,
+                hint=_no_hint):
+    """Chunked SSD over the full sequence. x: (B, S, d)."""
+    B, S, _ = x.shape
+    di, N, nH = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    P_, Q = cfg.ssm_head_dim, cfg.ssm_chunk
+    if S % Q:
+        Q = next(q for q in range(min(Q, S), 0, -1) if S % q == 0)
+
+    z, xr, Br, Cr, dt = _projections(p, cfg, x, hint)
+    xc = _causal_conv(xr, p["conv_x"], p["conv_bx"])
+    Bc_ = _causal_conv(Br, p["conv_B"], p["conv_bB"])
+    Cc_ = _causal_conv(Cr, p["conv_C"], p["conv_bC"])
+    xs = xc.reshape(B, S, nH, P_).astype(jnp.float32)
+    Bm = Bc_.astype(jnp.float32)                              # (B,S,N) G=1
+    Cm = Cc_.astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,nH)
+    A = -jnp.exp(p["A_log"])                                  # (nH,)
+
+    nc = S // Q
+    xs_c = xs.reshape(B, nc, Q, nH, P_)
+    B_c = Bm.reshape(B, nc, Q, N)
+    C_c = Cm.reshape(B, nc, Q, N)
+    dt_c = dt.reshape(B, nc, Q, nH)
+
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def chunk_step(h, inp):
+        xck, Bck, Cck, dtc = inp                  # (B,Q,...)
+        a = dtc * A                               # (B,Q,nH) <= 0
+        cum = jnp.cumsum(a, axis=1)
+        CB = jnp.einsum("bin,bjn->bij", Cck, Bck)  # (B,Q,Q)
+        decay = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # (B,Q,Q,nH)
+        M = jnp.where(tri[None, :, :, None], CB[..., None] * decay
+                      * dtc[:, None, :, :], 0.0)
+        y = jnp.einsum("bijh,bjhp->bihp", M, xck)
+        y = y + jnp.einsum("bin,bhpn->bihp", Cck, h) * jnp.exp(cum)[..., None]
+        a_sum = cum[:, -1]                        # (B,nH)
+        carry_decay = jnp.exp(a_sum[:, None, :] - cum)            # (B,Q,nH)
+        h_new = (jnp.exp(a_sum)[:, :, None, None] * h
+                 + jnp.einsum("bjh,bjn,bjhp->bhpn",
+                              carry_decay * dtc, Bck, xck))
+        return h_new, y
+
+    h0 = jnp.zeros((B, nH, P_, N), jnp.float32)
+    h_fin, ys = lax.scan(
+        chunk_step, h0,
+        (xs_c.swapaxes(0, 1), B_c.swapaxes(0, 1),
+         C_c.swapaxes(0, 1), dt_c.swapaxes(0, 1)),
+    )
+    y = ys.swapaxes(0, 1).reshape(B, S, nH, P_)
+    y = y + p["D"][:, None] * xs
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    if return_cache:
+        K = cfg.conv_kernel
+        raw = jnp.concatenate([xr, Br, Cr], axis=-1)
+        pad = jnp.pad(raw, ((0, 0), (K - 1, 0), (0, 0)))
+        conv_cache = pad[:, S: S + K - 1]
+        return out, {"conv": conv_cache.astype(x.dtype), "state": h_fin}
+    return out
+
+
+def ssm_decode(p, cfg: ArchConfig, x, cache, hint=_no_hint):
+    """One-token SSD step. x: (B, 1, d)."""
+    B = x.shape[0]
+    di, N, nH = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    P_, K = cfg.ssm_head_dim, cfg.conv_kernel
+    z, xr, Br, Cr, dt = _projections(p, cfg, x, hint)
+    raw = jnp.concatenate([xr[:, 0], Br[:, 0], Cr[:, 0]], axis=-1)  # (B, ch)
+    full = jnp.concatenate([cache["conv"], raw[:, None, :]], axis=1)  # (B,K,ch)
+
+    def conv1(w, b, lo, hi):
+        seg = full[:, :, lo:hi].astype(jnp.float32)
+        return jax.nn.silu(jnp.einsum("bkc,kc->bc", seg,
+                                      w.astype(jnp.float32)) + b)
+
+    xc = conv1(p["conv_x"], p["conv_bx"].astype(jnp.float32), 0, di)
+    Bm = conv1(p["conv_B"], p["conv_bB"].astype(jnp.float32), di, di + N)
+    Cm = conv1(p["conv_C"], p["conv_bC"].astype(jnp.float32), di + N, di + 2 * N)
+    xs = xc.reshape(B, nH, P_)
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,nH)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dtv * A)                                        # (B,nH)
+    h = (decay[:, :, None, None] * cache["state"]
+         + jnp.einsum("bh,bn,bhp->bhpn", dtv, Bm, xs))
+    y = jnp.einsum("bn,bhpn->bhp", Cm, h) + p["D"][:, None] * xs
+    y = y.reshape(B, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z[:, 0]), p["norm"], cfg.norm_eps)
+    out = (y @ p["out_proj"])[:, None, :]
+    new_cache = {"conv": full[:, 1:].astype(cache["conv"].dtype), "state": h}
+    return out, new_cache

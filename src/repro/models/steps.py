@@ -1,0 +1,268 @@
+"""Step factories (train / prefill / decode) + per-shape input specs.
+
+``input_specs(cfg, shape_name)`` is the dry-run contract: it returns
+ShapeDtypeStruct stand-ins for every input of the step function that the
+shape cell lowers — weak-type-correct, shardable, no device allocation.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ArchConfig
+from repro.models import decode as decode_mod
+from repro.models.transformer import (
+    ModelCtx,
+    forward,
+    forward_hidden,
+    init_params,
+    logits_from_h,
+)
+from repro.optim.adamw import AdamW
+
+AUX_WEIGHT = 0.01          # MoE load-balance loss weight
+SRC_FRACTION = 4           # enc-dec: source frames = seq_len / 4 (audio stub)
+
+
+# =============================================================================
+# Loss
+# =============================================================================
+
+def _ce_chunk_size(S: int, target: int = 512) -> int:
+    c = min(target, S)
+    while S % c:
+        c -= 1
+    return c
+
+
+def lm_loss(ctx: ModelCtx, params, batch):
+    """Vocab-parallel, sequence-chunked cross entropy.
+
+    Two measured memory cliffs avoided here (EXPERIMENTS.md §Perf):
+      1. ``take_along_axis`` + ``logsumexp`` make GSPMD all-gather the (T, V)
+         f32 logits per device (~21 GiB at the train_4k cells).  Instead the
+         label logit is a bool-mask select over the sharded vocab dim and
+         logsumexp is explicit max/sum reductions (local partials + psum).
+      2. Even sharded, the f32 logits pipeline is ~12 GiB live.  The head is
+         therefore re-applied per sequence chunk under ``jax.checkpoint``
+         inside a scan: live logits are (B, 512, V/tp) and the backward
+         recomputes them chunk by chunk.
+    """
+    h, extras = forward_hidden(ctx, params, batch)
+    from repro.distributed.sharding import make_hint
+    h = make_hint(ctx.mesh, ctx.dp_axes)(h)   # gather S before chunk reshape
+    tgt = batch["targets"]
+    mask = batch.get("loss_mask", jnp.ones_like(tgt, jnp.float32))
+    B, S, d = h.shape
+    C = _ce_chunk_size(S)
+    nc = S // C
+    h_c = h.reshape(B, nc, C, d).swapaxes(0, 1)          # (nc, B, C, d)
+    tgt_c = tgt.reshape(B, nc, C).swapaxes(0, 1)
+    mask_c = mask.reshape(B, nc, C).swapaxes(0, 1)
+
+    def chunk(carry, inp):
+        h_i, tgt_i, mask_i = inp
+        logits = logits_from_h(ctx, params, h_i)
+        m = jax.lax.stop_gradient(jnp.max(logits, axis=-1))
+        lse = m + jnp.log(jnp.sum(jnp.exp(logits - m[..., None]), axis=-1))
+        iota_v = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        ll = jnp.sum(jnp.where(iota_v == tgt_i[..., None], logits, 0.0), axis=-1)
+        return carry + jnp.sum((lse - ll) * mask_i), None
+
+    total, _ = jax.lax.scan(jax.checkpoint(chunk), jnp.zeros((), jnp.float32),
+                            (h_c, tgt_c, mask_c))
+    ce = total / jnp.maximum(jnp.sum(mask), 1.0)
+    aux = extras["aux"]
+    loss = ce + AUX_WEIGHT * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+def _split_microbatches(batch, accum: int):
+    """Reshape every batch leaf to (accum, B/accum, ...) on its batch dim
+    (dim 1 for M-RoPE positions (3, B, S), dim 0 otherwise)."""
+
+    def split(path, x):
+        name = ".".join(str(getattr(p, "key", p)) for p in path)
+        axis = 1 if ("positions" in name and x.ndim == 3) else 0
+        b = x.shape[axis]
+        assert b % accum == 0, (name, b, accum)
+        new = (x.shape[:axis] + (accum, b // accum) + x.shape[axis + 1:])
+        x = x.reshape(new)
+        return jnp.moveaxis(x, axis, 0)
+
+    return jax.tree_util.tree_map_with_path(split, batch)
+
+
+def make_train_step(ctx: ModelCtx, opt: AdamW, grad_transform=None,
+                    accum: int = 1):
+    """Returns ``step(params, opt_state, extra_state, batch) -> (...)``.
+
+    ``grad_transform`` is the hook used by gradient compression (error
+    feedback state rides in ``extra_state``).  ``accum > 1`` splits the batch
+    into gradient-accumulation microbatches (f32 accumulator, one optimizer
+    update) — the memory remedy for the ~400B MoE train cells
+    (EXPERIMENTS.md §Dry-run): peak activation memory scales with B/accum.
+    """
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: lm_loss(ctx, p, batch), has_aux=True)(params)
+
+    def step(params, opt_state, extra_state, batch):
+        if accum == 1:
+            (loss, metrics), grads = grads_of(params, batch)
+        else:
+            micro = _split_microbatches(batch, accum)
+
+            def body(carry, mb):
+                gsum, lsum = carry
+                (l, _), g = grads_of(params, mb)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (gsum, lsum), _ = jax.lax.scan(body, (g0, jnp.zeros((), jnp.float32)),
+                                           micro)
+            grads = jax.tree.map(lambda g: g / accum, gsum)
+            loss = lsum / accum
+            metrics = {"ce": loss, "aux": jnp.zeros((), jnp.float32)}
+        if grad_transform is not None:
+            grads, extra_state = grad_transform(grads, extra_state)
+        params, opt_state, om = opt.update(grads, opt_state, params)
+        metrics = dict(metrics, loss=loss, **om)
+        return params, opt_state, extra_state, metrics
+
+    return step
+
+
+def make_forward(ctx: ModelCtx):
+    def fwd(params, batch):
+        logits, _ = forward(ctx, params, batch)
+        return logits
+
+    return fwd
+
+
+def make_prefill(ctx: ModelCtx):
+    """Prefill: last-position logits + the per-layer k/v needed for decode.
+
+    Full-sequence logits would cost (B, S, V) f32 for one useful row —
+    prefill serves sampling, so only position S-1 reaches the head.
+    """
+
+    def fwd(params, batch):
+        h, extras = forward_hidden(ctx, params, batch, collect_kv=True)
+        logits = logits_from_h(ctx, params, h[:, -1:])
+        return logits, extras["kvs"]
+
+    return fwd
+
+
+def make_decode_step(ctx: ModelCtx):
+    cfg = ctx.cfg
+
+    if cfg.enc_dec:
+        def step(params, tokens, cur_pos, caches, cross_kvs):
+            return decode_mod.decode_step(ctx, params, tokens, cur_pos, caches,
+                                          cross_kvs=cross_kvs)
+        return step
+
+    def step(params, tokens, cur_pos, caches):
+        return decode_mod.decode_step(ctx, params, tokens, cur_pos, caches)
+
+    return step
+
+
+# =============================================================================
+# Input specs (dry-run contract) and synthetic batches (smoke/examples)
+# =============================================================================
+
+def _batch_shapes(cfg: ArchConfig, shape_name: str,
+                  override: tuple[int, int] | None = None,
+                  dtype=jnp.bfloat16) -> dict[str, Any]:
+    """Abstract input shapes for the *step function* of this shape cell.
+
+    ``override=(S, B)`` shrinks the cell for CPU smoke tests.
+    """
+    S, B, kind = SHAPES[shape_name]
+    if override is not None:
+        S, B = override
+    i32, bf16 = jnp.int32, dtype
+    d = cfg.d_model
+
+    def tok(shape):
+        return jax.ShapeDtypeStruct(shape, i32)
+
+    if kind in ("train", "prefill"):
+        batch: dict[str, Any] = {}
+        if cfg.frontend == "none":
+            batch["tokens"] = tok((B, S))
+        else:
+            batch["embeds"] = jax.ShapeDtypeStruct((B, S, d), bf16)
+        if cfg.mrope:
+            batch["positions"] = tok((3, B, S))
+        else:
+            batch["positions"] = tok((B, S))
+        if cfg.enc_dec:
+            T = S // SRC_FRACTION
+            batch = {
+                "tokens": tok((B, S)),
+                "positions": tok((B, S)),
+                "src_embeds": jax.ShapeDtypeStruct((B, T, d), bf16),
+                "src_positions": tok((B, T)),
+            }
+        if kind == "train":
+            batch["targets"] = tok((B, S))
+        return batch
+
+    # decode: one new token against a cache of S positions
+    batch = {"tokens": tok((B, 1)), "cur_pos": jax.ShapeDtypeStruct((), i32)}
+    ctx = ModelCtx(cfg=cfg, dtype=dtype)
+    caches = jax.eval_shape(
+        lambda: decode_mod.init_caches(ctx, B, S))
+    batch["caches"] = caches
+    if cfg.enc_dec:
+        T = S // SRC_FRACTION
+        KV, hd = cfg.n_kv_heads, cfg.hd
+        kv = jax.ShapeDtypeStruct((cfg.n_layers, B, T, KV, hd), bf16)
+        batch["cross_kvs"] = (kv, kv)
+    return batch
+
+
+def input_specs(cfg: ArchConfig, shape_name: str,
+                override: tuple[int, int] | None = None,
+                dtype=jnp.bfloat16) -> dict[str, Any]:
+    return _batch_shapes(cfg, shape_name, override, dtype)
+
+
+def synthetic_batch(cfg: ArchConfig, shape_name: str, key=None,
+                    override: tuple[int, int] | None = None,
+                    dtype=jnp.bfloat16) -> dict[str, Any]:
+    """Concrete random inputs with the spec's structure (smoke tests).
+
+    Intended for REDUCED configs — full configs go through the dry-run only.
+    """
+    key = key if key is not None else jax.random.PRNGKey(0)
+    spec = _batch_shapes(cfg, shape_name, override, dtype)
+    S = override[0] if override else SHAPES[shape_name][0]
+
+    def realise(path, s):
+        name = ".".join(str(getattr(p, "key", p)) for p in path)
+        if name.endswith(".pos"):          # cache slot positions: full cache
+            C = s.shape[-1]
+            return jnp.broadcast_to(jnp.arange(C, dtype=s.dtype), s.shape)
+        if "positions" in name:
+            pos = jnp.arange(s.shape[-1], dtype=s.dtype)
+            return jnp.broadcast_to(pos, s.shape)
+        if "cur_pos" in name:
+            return jnp.array(S, s.dtype)   # next position after the cache
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            return jax.random.randint(key, s.shape, 0, cfg.vocab_size, s.dtype)
+        return (jax.random.normal(key, s.shape, jnp.float32) * 0.02).astype(s.dtype)
+
+    return jax.tree_util.tree_map_with_path(realise, spec)

@@ -1,0 +1,333 @@
+"""Model assembly for all 10 assigned architectures.
+
+One parameterised stack covers: dense GQA transformers (minicpm, internlm2,
+gemma2, qwen2.5), MoE (qwen3-moe every-layer, llama4 interleaved+shared),
+VLM backbone (qwen2-vl, M-RoPE + embedding inputs), SSD (mamba2), hybrid
+attn||SSM (hymba), and encoder-decoder (seamless-m4t, audio frontend stub).
+
+Layers are scanned (stacked params) so the HLO stays one-layer-sized — the
+dry-run multiplies per-layer cost by trip count explicitly (DESIGN.md §7).
+Per-layer heterogeneity is handled by scanned flag arrays (gemma2
+local/global) or super-layer grouping (llama4 dense+moe pairs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import make_hint
+from repro.models import attention as attn_mod
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import embed_init, rms_norm, softcap
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCtx:
+    """Everything the pure functions need besides params."""
+    cfg: ArchConfig
+    mesh: Mesh | None = None
+    dp_axes: tuple[str, ...] = ()
+    tp_axis: str = "model"
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+
+
+# =============================================================================
+# Init
+# =============================================================================
+
+def _init_layer(key, cfg: ArchConfig, dtype, *, kind: str) -> dict:
+    """kind: dense | moe | ssm | hybrid | encoder | decoder_x (with cross)."""
+    ks = jax.random.split(key, 8)
+    p: dict[str, Any] = {"norm_attn": jnp.ones((cfg.d_model,), dtype)}
+    if cfg.post_norm:
+        p["post_norm_attn"] = jnp.ones((cfg.d_model,), dtype)
+    if kind == "ssm":
+        p["ssm"] = ssm_mod.init_ssm_params(ks[0], cfg, dtype)
+        return p
+    p["attn"] = attn_mod.init_attn_params(ks[0], cfg, dtype)
+    if kind == "hybrid":
+        p["ssm"] = ssm_mod.init_ssm_params(ks[1], cfg, dtype)
+        p["fuse_norm_attn"] = jnp.ones((cfg.d_model,), dtype)
+        p["fuse_norm_ssm"] = jnp.ones((cfg.d_model,), dtype)
+    p["norm_mlp"] = jnp.ones((cfg.d_model,), dtype)
+    if cfg.post_norm:
+        p["post_norm_mlp"] = jnp.ones((cfg.d_model,), dtype)
+    if kind == "moe":
+        p["moe"] = moe_mod.init_moe_params(ks[2], cfg, dtype)
+    else:
+        ff = cfg.dense_ff or cfg.d_ff
+        p["mlp"] = mlp_mod.init_mlp_params(ks[2], cfg.d_model, ff, dtype)
+    if kind == "decoder_x":
+        p["cross"] = attn_mod.init_cross_params(ks[3], cfg, dtype)
+        p["norm_cross"] = jnp.ones((cfg.d_model,), dtype)
+    return p
+
+
+def layer_kind(cfg: ArchConfig) -> str:
+    return {"ssm": "ssm", "hybrid": "hybrid", "moe": "moe"}.get(cfg.family, "dense")
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.bfloat16) -> dict:
+    keys = jax.random.split(key, 6)
+    params: dict[str, Any] = {
+        "embed": embed_init(keys[0], (cfg.vocab_size, cfg.d_model), dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = embed_init(keys[1], (cfg.vocab_size, cfg.d_model), dtype)
+
+    kind = layer_kind(cfg)
+    if cfg.family == "moe" and cfg.moe_every == 2:
+        n_super = cfg.n_layers // 2
+        dk = jax.random.split(keys[2], n_super)
+        mk = jax.random.split(keys[3], n_super)
+        params["layers"] = {
+            "dense": jax.vmap(lambda k: _init_layer(k, cfg, dtype, kind="dense"))(dk),
+            "moe": jax.vmap(lambda k: _init_layer(k, cfg, dtype, kind="moe"))(mk),
+        }
+    elif cfg.enc_dec:
+        ek = jax.random.split(keys[2], cfg.n_enc_layers)
+        dk = jax.random.split(keys[3], cfg.n_layers)
+        params["encoder"] = {
+            "layers": jax.vmap(lambda k: _init_layer(k, cfg, dtype, kind="dense"))(ek),
+            "final_norm": jnp.ones((cfg.d_model,), dtype),
+        }
+        params["layers"] = jax.vmap(
+            lambda k: _init_layer(k, cfg, dtype, kind="decoder_x"))(dk)
+    else:
+        lk = jax.random.split(keys[2], cfg.n_layers)
+        params["layers"] = jax.vmap(
+            lambda k: _init_layer(k, cfg, dtype, kind=kind))(lk)
+    return params
+
+
+# =============================================================================
+# Layer bodies (full-sequence mode)
+# =============================================================================
+
+def _maybe_post(cfg, p, name, y):
+    return rms_norm(y, p[name], cfg.norm_eps) if cfg.post_norm else y
+
+
+def _sp_hint(ctx: ModelCtx, S: int):
+    """Sequence-parallel residual-stream constraint (Megatron-SP).
+
+    Between layers the residual stream is sharded (dp, model, None) over
+    (B, S, d): the per-layer all-reduce of the wo/w_out partials becomes an
+    equal-traffic reduce-scatter + all-gather pair, and — the point — every
+    saved activation of the backward scan shrinks by the tensor width
+    (measured 16x on the stacked (L, B, S, d) saves; EXPERIMENTS.md §Perf).
+    """
+    hint = make_hint(ctx.mesh, ctx.dp_axes)
+    if (ctx.mesh is None or ctx.mesh.devices.size == 1
+            or ctx.tp_axis in ctx.dp_axes          # pure-FSDP profile: no SP
+            or S % ctx.mesh.shape[ctx.tp_axis]):
+        return hint, lambda t: t
+    return hint, lambda t: hint(t, ctx.tp_axis, None)
+
+
+def _layer_forward(ctx: ModelCtx, p, h, positions, *, window: int,
+                   kind: str, enc_kv=None, causal=True):
+    """One layer, full sequence. Returns new h (and optional (k, v))."""
+    cfg = ctx.cfg
+    hint, sp = _sp_hint(ctx, h.shape[1])
+    kv = None
+    if kind == "ssm":
+        y = ssm_mod.ssm_forward(p["ssm"], cfg,
+                                hint(rms_norm(h, p["norm_attn"], cfg.norm_eps)),
+                                hint=hint)
+        return sp(h + cfg.residual_scale * sp(y)), (None, 0.0)
+    x = hint(rms_norm(h, p["norm_attn"], cfg.norm_eps))
+    if causal:
+        a, kv = attn_mod.attn_forward(p["attn"], cfg, x, positions,
+                                      window=window, hint=hint)
+    else:  # bidirectional encoder
+        q, k, v = attn_mod._project_qkv(p["attn"], cfg, x, positions, hint)
+        a = attn_mod._sdpa(cfg, q, k, v, jnp.ones((1, 1, 1, 1), bool))
+        a = a @ p["attn"]["wo"]
+    if kind == "hybrid":
+        s = ssm_mod.ssm_forward(p["ssm"], cfg, x, hint=hint)
+        a = 0.5 * (rms_norm(sp(a), p["fuse_norm_attn"], cfg.norm_eps)
+                   + rms_norm(sp(s), p["fuse_norm_ssm"], cfg.norm_eps))
+    h = sp(h + cfg.residual_scale * _maybe_post(cfg, p, "post_norm_attn", sp(a)))
+    if enc_kv is not None:
+        c = attn_mod.cross_forward(
+            p["cross"], cfg, hint(rms_norm(h, p["norm_cross"], cfg.norm_eps)),
+            enc_kv)
+        h = sp(h + cfg.residual_scale * sp(c))
+    x = hint(rms_norm(h, p["norm_mlp"], cfg.norm_eps))
+    if kind == "moe":
+        m, aux = moe_mod.moe_forward(p["moe"], cfg, x, ctx.mesh, ctx.dp_axes,
+                                     ctx.tp_axis)
+    else:
+        m, aux = mlp_mod.mlp_forward(p["mlp"], cfg, x, hint), 0.0
+    h = sp(h + cfg.residual_scale * _maybe_post(cfg, p, "post_norm_mlp", sp(m)))
+    return h, (kv, aux)
+
+
+def _window_flags(cfg: ArchConfig) -> list[int]:
+    """Static per-layer sliding windows (gemma2 alternation, hymba all-SW)."""
+    if cfg.local_global:
+        return [cfg.sliding_window if (i % 2 == 0) else 0
+                for i in range(cfg.n_layers)]
+    return [cfg.sliding_window] * cfg.n_layers
+
+
+def _scan_layers(ctx: ModelCtx, stacked, h, positions, *, kind, enc_kv=None,
+                 collect_kv: bool = False):
+    """Scan h through stacked layers; windows vary per layer -> grouped scans."""
+    cfg = ctx.cfg
+    windows = _window_flags(cfg) if kind not in ("ssm",) else [0] * cfg.n_layers
+    aux_total = 0.0
+    kv_all = []
+
+    def body(window, collect):
+        def f(h, p):
+            h2, (kv, aux) = _layer_forward(ctx, p, h, positions, window=window,
+                                           kind=kind, enc_kv=enc_kv)
+            out = (kv, aux) if collect else (None, aux)
+            return h2, out
+        return jax.checkpoint(f) if ctx.remat else f
+
+    if cfg.local_global:
+        # alternate local/global: scan pairs (same param shapes, different masks)
+        L = cfg.n_layers
+        tree = jax.tree.map(lambda x: x.reshape(2, L // 2, *x.shape[1:]).swapaxes(0, 1),
+                            stacked)
+
+        def pair(h, p2):
+            p_even = jax.tree.map(lambda x: x[0], p2)
+            p_odd = jax.tree.map(lambda x: x[1], p2)
+            h, (kv0, a0) = body(cfg.sliding_window, collect_kv)(h, p_even)
+            h, (kv1, a1) = body(0, collect_kv)(h, p_odd)
+            return h, ((kv0, kv1), a0 + a1)
+
+        h, (kvs, auxs) = lax.scan(pair, h, tree)
+        if collect_kv:
+            kv_all = kvs
+        aux_total = jnp.sum(auxs) if kind == "moe" else 0.0
+        return h, kv_all, aux_total
+
+    window = windows[0]
+    h, (kvs, auxs) = lax.scan(body(window, collect_kv), h, stacked)
+    if collect_kv:
+        kv_all = kvs
+    aux_total = jnp.sum(auxs) if kind == "moe" else 0.0
+    return h, kv_all, aux_total
+
+
+# =============================================================================
+# Full-model forward (train / prefill)
+# =============================================================================
+
+def embed_tokens(ctx: ModelCtx, params, tokens):
+    h = jnp.take(params["embed"], tokens, axis=0)
+    return (h * ctx.cfg.embed_scale).astype(ctx.dtype)
+
+
+def logits_from_h(ctx: ModelCtx, params, h):
+    cfg = ctx.cfg
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,vd->bsv", h, table) * cfg.logit_scale
+    logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    if ctx.mesh is not None and ctx.mesh.devices.size > 1:
+        from repro.distributed.sharding import make_hint
+        tp = None if ctx.tp_axis in ctx.dp_axes else ctx.tp_axis
+        logits = make_hint(ctx.mesh, ctx.dp_axes)(logits, tp)
+    return logits
+
+
+def forward_hidden(ctx: ModelCtx, params, batch, *, collect_kv: bool = False):
+    """Full-sequence forward up to the final hidden states (pre-norm).
+
+    batch: tokens (B,S) and/or embeds (B,S,d); positions; enc-dec adds
+    src_embeds (B,T,d).  Returns (h, extras).
+    """
+    cfg = ctx.cfg
+    if "embeds" in batch:
+        h = (batch["embeds"] * cfg.embed_scale).astype(ctx.dtype)
+    else:
+        h = embed_tokens(ctx, params, batch["tokens"])
+    _, sp = _sp_hint(ctx, h.shape[1])
+    h = sp(h)
+    positions = batch["positions"]
+
+    enc_kv = None
+    if cfg.enc_dec:
+        src = (batch["src_embeds"] * cfg.embed_scale).astype(ctx.dtype)
+        src_pos = batch["src_positions"]
+        enc_h, _, _ = _scan_layers_enc(ctx, params["encoder"]["layers"], src, src_pos)
+        enc_out = rms_norm(enc_h, params["encoder"]["final_norm"], cfg.norm_eps)
+        batch = dict(batch, enc_out=enc_out)
+
+    if cfg.family == "moe" and cfg.moe_every == 2:
+        h, kvs, aux = _scan_superlayers(ctx, params["layers"], h, positions,
+                                        collect_kv=collect_kv)
+    elif cfg.enc_dec:
+        h, kvs, aux = _scan_decoder_x(ctx, params["layers"], h, positions,
+                                      batch["enc_out"], collect_kv=collect_kv)
+    else:
+        h, kvs, aux = _scan_layers(ctx, params["layers"], h, positions,
+                                   kind=layer_kind(cfg), collect_kv=collect_kv)
+    extras = {"kvs": kvs, "aux": aux}
+    if cfg.enc_dec:
+        extras["enc_out"] = batch["enc_out"]
+    return h, extras
+
+
+def forward(ctx: ModelCtx, params, batch, *, collect_kv: bool = False):
+    """Full-sequence forward to logits (prefill / eval path)."""
+    h, extras = forward_hidden(ctx, params, batch, collect_kv=collect_kv)
+    return logits_from_h(ctx, params, h), extras
+
+
+def _scan_layers_enc(ctx: ModelCtx, stacked, h, positions):
+    def f(h, p):
+        h2, _ = _layer_forward(ctx, p, h, positions, window=0, kind="dense",
+                               causal=False)
+        return h2, None
+    f = jax.checkpoint(f) if ctx.remat else f
+    h, _ = lax.scan(f, h, stacked)
+    return h, None, 0.0
+
+
+def _scan_superlayers(ctx: ModelCtx, stacked, h, positions, *, collect_kv):
+    cfg = ctx.cfg
+
+    def f(h, p2):
+        h, (kv0, _) = _layer_forward(ctx, p2["dense"], h, positions, window=0,
+                                     kind="dense")
+        h, (kv1, aux) = _layer_forward(ctx, p2["moe"], h, positions, window=0,
+                                       kind="moe")
+        return h, ((kv0, kv1) if collect_kv else None, aux)
+
+    f = jax.checkpoint(f) if ctx.remat else f
+    h, (kvs, auxs) = lax.scan(f, h, stacked)
+    return h, (kvs if collect_kv else []), jnp.sum(auxs)
+
+
+def _scan_decoder_x(ctx: ModelCtx, stacked, h, positions, enc_out, *, collect_kv):
+    cfg = ctx.cfg
+
+    def f(carry, p):
+        h = carry
+        enc_kv = attn_mod.cross_kv(p["cross"], cfg, enc_out)
+        h2, (kv, aux) = _layer_forward(ctx, p, h, positions, window=0,
+                                       kind="dense", enc_kv=enc_kv)
+        return h2, ((kv, enc_kv) if collect_kv else None, aux)
+
+    f = jax.checkpoint(f) if ctx.remat else f
+    h, (kvs, _) = lax.scan(f, h, stacked)
+    return h, (kvs if collect_kv else []), 0.0

@@ -1,0 +1,73 @@
+"""AdamW with f32 moments over bf16 params + global-norm clipping.
+
+Moments are stored f32 and sharded exactly like the params (the update is
+elementwise, so GSPMD keeps it fully local); the master-copy is elided —
+updates are computed in f32 and cast back, which at these scales costs <1 bit
+of effective precision per step and saves 4 bytes/param of HBM (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: dict
+    v: dict
+
+
+class AdamW(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def adamw(
+    schedule: Callable[[jax.Array], jax.Array],
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: float = 1.0,
+) -> AdamW:
+    def init(params):
+        zeros = lambda: jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros(), v=zeros())
+
+    def update(grads, state: AdamWState, params):
+        step = state.step + 1
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, clip_norm / (gnorm + 1e-9))
+        lr = schedule(step).astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32) * scale
+            m2 = b1 * m + (1 - b1) * g
+            v2 = b2 * v + (1 - b2) * g * g
+            mhat = m2 / (1 - b1 ** step.astype(jnp.float32))
+            vhat = v2 / (1 - b2 ** step.astype(jnp.float32))
+            delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+            p2 = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+            return p2, m2, v2
+
+        out = jax.tree.map(upd, grads, state.m, state.v, params)
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, AdamWState(step=step, m=new_m, v=new_v), {
+            "grad_norm": gnorm, "lr": lr}
+
+    return AdamW(init=init, update=update)

@@ -1,0 +1,47 @@
+"""LR schedules: WSD (minicpm's warmup-stable-decay), cosine, linear."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def wsd(peak_lr: float, warmup: int, stable: int, decay: int,
+        final_frac: float = 0.1):
+    """MiniCPM's Warmup-Stable-Decay: linear warmup, flat plateau, then a
+    short exponential-ish (here: linear) decay to ``final_frac``·peak."""
+
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / max(warmup, 1)
+        dec_t = (s - warmup - stable) / max(decay, 1)
+        dec = peak_lr * (1.0 - (1.0 - final_frac) * jnp.clip(dec_t, 0.0, 1.0))
+        return jnp.where(s < warmup, warm, jnp.where(s < warmup + stable,
+                                                     peak_lr, dec))
+
+    return f
+
+
+def cosine(peak_lr: float, warmup: int, total: int, final_frac: float = 0.1):
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / max(warmup, 1)
+        t = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(s < warmup, warm, peak_lr * cos)
+
+    return f
+
+
+def constant(lr: float):
+    def f(step):
+        return jnp.full((), lr, jnp.float32)
+
+    return f
+
+
+def for_arch(arch_name: str, peak_lr: float = 3e-4, total: int = 10_000):
+    """MiniCPM trains with WSD (its headline schedule); others use cosine."""
+    if arch_name.startswith("minicpm"):
+        return wsd(peak_lr, warmup=total // 100 + 1, stable=int(total * 0.8),
+                   decay=int(total * 0.19) + 1)
+    return cosine(peak_lr, warmup=total // 100 + 1, total=total)

@@ -1,0 +1,138 @@
+"""Fault-tolerant checkpointing: async writes, retention, elastic restore.
+
+Checkpoints are *global* host arrays (one ``.npy`` per leaf + a JSON
+manifest), so a restore can target ANY mesh shape — the elastic-rescale path
+(runtime/elastic.py) is just ``device_put`` onto new shardings.  Writes are
+atomic (tmp dir + rename) and can run on a background thread so the train
+loop never blocks on storage.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import ml_dtypes
+import numpy as np
+
+_SEP = "__"
+
+# numpy can't serialise ml_dtypes (bfloat16 etc.) natively — store a
+# same-width integer view and reconstruct on load.
+_EXOTIC = {
+    "bfloat16": (ml_dtypes.bfloat16, np.uint16),
+    "float8_e4m3fn": (ml_dtypes.float8_e4m3fn, np.uint8),
+    "float8_e5m2": (ml_dtypes.float8_e5m2, np.uint8),
+}
+
+
+def _to_safe(arr: np.ndarray) -> np.ndarray:
+    name = str(arr.dtype)
+    if name in _EXOTIC:
+        return arr.view(_EXOTIC[name][1])
+    return arr
+
+
+def _from_safe(arr: np.ndarray, target_dtype) -> np.ndarray:
+    name = str(target_dtype)
+    if name in _EXOTIC:
+        return arr.view(_EXOTIC[name][0])
+    return arr.astype(target_dtype)
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        flat[key] = _to_safe(np.asarray(leaf))
+    return flat
+
+
+def save(state: Any, directory: str, step: int, *, keep: int = 3,
+         background: bool = False) -> threading.Thread | None:
+    """Write ``state`` (pytree) to ``directory/step_<n>``; prune old steps."""
+    treedef = jax.tree_util.tree_structure(state)
+    flat = _flatten(state)
+
+    def write():
+        final = os.path.join(directory, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        for k, v in flat.items():
+            np.save(os.path.join(tmp, k + ".npy"), v)
+        manifest = {
+            "step": step,
+            "treedef": str(treedef),
+            "keys": sorted(flat.keys()),
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        _prune(directory, keep)
+
+    if background:
+        t = threading.Thread(target=write, daemon=True)
+        t.start()
+        return t
+    write()
+    return None
+
+
+def _prune(directory: str, keep: int) -> None:
+    steps = sorted(d for d in os.listdir(directory) if d.startswith("step_")
+                   and not d.endswith(".tmp"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(template: Any, directory: str, step: int | None = None,
+            shardings: Any = None) -> tuple[Any, int]:
+    """Restore into the structure of ``template``.
+
+    ``shardings`` (optional pytree of NamedSharding) places each leaf
+    directly onto devices — pass the CURRENT mesh's shardings to perform an
+    elastic restore onto a different topology than the one that saved.
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    d = os.path.join(directory, f"step_{step:08d}")
+    leaves_p, treedef = jax.tree_util.tree_flatten_with_path(template)
+    if shardings is None:
+        shard_leaves = [None] * len(leaves_p)
+    else:
+        # shardings may be a PREFIX tree (e.g. (param_shardings, None))
+        shard_leaves = []
+
+        def _add(pfx_leaf, subtree):
+            n = len(jax.tree_util.tree_leaves(subtree))
+            shard_leaves.extend([pfx_leaf] * n)
+
+        jax.tree_util.tree_map(
+            _add, shardings, template,
+            is_leaf=lambda x: x is None or isinstance(x, jax.sharding.Sharding))
+    out = []
+    for (path, leaf), sh in zip(leaves_p, shard_leaves):
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        arr = np.load(os.path.join(d, key + ".npy"))
+        if hasattr(leaf, "dtype"):
+            arr = _from_safe(arr, leaf.dtype)
+        out.append(jax.device_put(arr, sh) if sh is not None else arr)
+    return jax.tree_util.tree_unflatten(treedef, out), step

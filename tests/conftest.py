@@ -1,0 +1,20 @@
+# NOTE: deliberately NO xla_force_host_platform_device_count here — smoke
+# tests and benches must see 1 device (the dry-run sets 512 inside its own
+# process).  Multi-device distributed tests run via subprocess (see
+# tests/test_distributed_solvers.py).
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def f64():
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def mesh1():
+    """Trivial 1-device mesh with production axis names."""
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,124 @@
+"""Distributed solvers on an 8-device host mesh (subprocess: the main pytest
+process must keep seeing 1 device).
+
+Asserts (i) distributed == single-device solutions/iterations for every
+method, (ii) one all-reduce per fused reduction (the single-collective claim),
+(iii) the paper's barrier structure: CG-NB removes the zero-slack reduction
+classical CG has; BiCGStab-B1 keeps exactly one.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys, json
+sys.path.insert(0, "src")
+import jax
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from repro.core.problems import make_problem
+from repro.core.solvers import SOLVERS, LocalOp
+from repro.core.distributed import solve_shardmap, solve_step_shardmap
+from repro.analysis.hlo import overlap_slack, count_collectives
+
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+prob = make_problem((16, 16, 16), "27pt")
+b, x0 = prob.b(), prob.x0()
+A = LocalOp(prob.stencil)
+out = {}
+for m in sorted(SOLVERS):
+    ref = SOLVERS[m](A, b, x0, tol=1e-6, maxiter=700, norm_ref=1.0)
+    fn, layout = solve_shardmap(prob, m, mesh, tol=1e-6, maxiter=700)
+    sh = NamedSharding(mesh, layout.spec())
+    res = jax.jit(fn)(jax.device_put(b, sh), jax.device_put(x0, sh))
+    out[m] = dict(
+        ref_iters=int(ref.iters), dist_iters=int(res.iters),
+        max_dx=float(jnp.abs(res.x - ref.x).max()),
+        res=float(res.res_norm),
+    )
+
+vec_bytes = b.size // 8 * 8
+for m in ("cg", "cg_nb", "bicgstab", "bicgstab_b1"):
+    # paper-faithful implementation, fusion disabled: the trace asserts the
+    # ALGORITHM's dependence structure (fusion moves work before the
+    # collective issues, which hides it from the slack accounting; the TPU
+    # latency-hiding scheduler works on the unfused graph)
+    fn, layout = solve_step_shardmap(prob, m, mesh, halo_mode="scatter",
+                                     matvec_padded=prob.stencil.matvec_padded)
+    sh = NamedSharding(mesh, layout.spec())
+    args = [jax.device_put(b, sh)] * 5 + [jnp.array(1.0), jnp.array(1.0)]
+    lowered = jax.jit(fn).lower(*args)
+    c = lowered.compile(compiler_options={
+        "xla_disable_hlo_passes": "fusion,cpu-instruction-fusion"})
+    txt = c.as_text()
+    rep = overlap_slack(txt)
+    ar = [r for r in rep if r["op"].startswith("all-reduce")]
+    out[m + "_step"] = dict(
+        n_allreduce=len(ar),
+        hard_barriers=sum(1 for r in ar if r["slack_bytes"] < vec_bytes / 8),
+        max_slack=max(r["slack_bytes"] for r in ar),
+        counts=count_collectives(lowered.compile().as_text()),
+    )
+print(json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def results():
+    proc = subprocess.run(
+        [sys.executable, "-c", _SCRIPT],
+        capture_output=True, text=True, timeout=560,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def test_distributed_matches_single_device(results):
+    for m in ("cg", "cg_nb", "bicgstab", "bicgstab_b1", "jacobi",
+              "gauss_seidel_rb"):
+        r = results[m]
+        assert r["dist_iters"] == r["ref_iters"], (m, r)
+        assert r["max_dx"] < 1e-9, (m, r)
+
+
+def test_relaxed_gs_converges_distributed(results):
+    """Relaxed GS convergence may differ across blocks (stale halos — the
+    paper's data-race semantics) but must still solve the system."""
+    r = results["gauss_seidel"]
+    assert r["res"] < 1e-6
+    assert r["max_dx"] < 1e-6
+    assert abs(r["dist_iters"] - r["ref_iters"]) <= 0.2 * r["ref_iters"] + 2
+
+
+def test_collective_counts_per_iteration(results):
+    """One all-reduce per (fused) reduction: CG 2, CG-NB 2, BiCGStab 3, B1 3."""
+    assert results["cg_step"]["n_allreduce"] == 2
+    assert results["cg_nb_step"]["n_allreduce"] == 2
+    assert results["bicgstab_step"]["n_allreduce"] == 3
+    assert results["bicgstab_b1_step"]["n_allreduce"] == 3
+
+
+def test_barrier_elimination_matches_paper(results):
+    """Hard (zero-slack) barriers in the algorithm-level dependence graph:
+    classical CG keeps one, CG-NB eliminates it; B1's alpha_d stays hard
+    (the paper's "one blocking" name); CG-NB's r·r reduction gets a
+    SpMV-sized overlap window — the Fig. 1(b) structure.
+
+    (Dataflow execution already hides the paper's OTHER MPI barriers for the
+    classical methods — see EXPERIMENTS.md fig2 discussion.)
+    """
+    vec = 16 ** 3 * 8 // 8  # one local vector (f64, 8 shards)
+    assert results["cg_step"]["hard_barriers"] == 1
+    assert results["cg_nb_step"]["hard_barriers"] == 0
+    assert results["cg_nb_step"]["max_slack"] > 10 * vec   # SpMV-sized window
+    assert results["bicgstab_step"]["hard_barriers"] >= 1
+    assert results["bicgstab_b1_step"]["hard_barriers"] == 1

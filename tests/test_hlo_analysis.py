@@ -1,0 +1,67 @@
+"""HLO analysis layer: shape parsing, collective counting, overlap slack."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.hlo import (
+    collective_bytes,
+    count_collectives,
+    overlap_slack,
+    parse_computations,
+    shape_bytes,
+)
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[128,256]{1,0}") == 128 * 256 * 4
+    assert shape_bytes("bf16[4096]") == 8192
+    assert shape_bytes("pred[]") == 1
+    assert shape_bytes("(f32[8], s32[4])") == 32 + 16
+
+
+def test_parse_simple_program():
+    txt = jax.jit(lambda a, b: a @ b + 1.0).lower(
+        jnp.zeros((8, 8)), jnp.zeros((8, 8))).compile().as_text()
+    comps = parse_computations(txt)
+    assert comps
+    ops = {i.opcode for c in comps for i in c.instructions}
+    assert any("dot" in o or "fusion" in o or "custom-call" in o for o in ops)
+
+
+def test_no_collectives_single_device():
+    txt = jax.jit(lambda a: a * 2).lower(jnp.zeros((8,))).compile().as_text()
+    assert count_collectives(txt) == {}
+    assert collective_bytes(txt) == 0
+
+
+def test_trip_count_scaling():
+    hlo = """
+HloModule m
+%body.1 (p: f32[8]) -> f32[8] {
+  %p = f32[8] parameter(0)
+  ROOT %ar = f32[8] all-reduce(%p), to_apply=%add
+}
+ENTRY %main (x: f32[8]) -> f32[8] {
+  %x = f32[8] parameter(0)
+  ROOT %ar2 = f32[8] all-reduce(%x), to_apply=%add
+}
+"""
+    base = collective_bytes(hlo)
+    scaled = collective_bytes(hlo, trip_counts={"body": 10})
+    assert scaled == base + 9 * 32  # body's 32B counted 10x
+
+
+def test_overlap_slack_structure():
+    hlo = """
+ENTRY %main (x: f32[64], y: f32[64]) -> f32[64] {
+  %x = f32[64] parameter(0)
+  %y = f32[64] parameter(1)
+  %ar = f32[64] all-reduce(%x), to_apply=%add
+  %big = f32[64] multiply(%y, %y)
+  ROOT %out = f32[64] add(%ar, %big)
+}
+"""
+    rep = overlap_slack(hlo)
+    assert len(rep) == 1
+    # %big is independent of the all-reduce -> hideable work exists
+    assert rep[0]["slack_bytes"] >= 256

@@ -1,0 +1,129 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.operators import STENCIL_7PT, STENCIL_27PT
+from repro.core.problems import make_problem
+from repro.core.solvers import SOLVERS, LocalOp
+from repro.kernels import ops, ref
+
+STENCILS = [STENCIL_7PT, STENCIL_27PT]
+SHAPES = [(8, 8, 8), (12, 10, 16), (16, 16, 24)]
+DTYPES = [jnp.float32, jnp.float64]
+
+
+def tols(dt):
+    return dict(rtol=1e-4, atol=1e-5) if dt == jnp.float32 else dict(rtol=1e-12, atol=1e-12)
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _f64():
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", False)
+
+
+@pytest.mark.parametrize("stencil", STENCILS, ids=lambda s: s.name)
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dt", DTYPES, ids=str)
+def test_stencil_spmv(stencil, shape, dt):
+    x = jax.random.normal(jax.random.PRNGKey(0), shape, dt)
+    xp = jnp.pad(x, 1)
+    y = ops.spmv(xp, stencil)
+    yr = ref.stencil_spmv_ref(xp, stencil=stencil)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), **tols(dt))
+
+
+@pytest.mark.parametrize("stencil", STENCILS, ids=lambda s: s.name)
+@pytest.mark.parametrize("dt", DTYPES, ids=str)
+def test_stencil_spmv_fused_dot(stencil, dt):
+    x = jax.random.normal(jax.random.PRNGKey(1), (12, 12, 16), dt)
+    xp = jnp.pad(x, 1)
+    y, d = ops.spmv_dot(xp, stencil)
+    yr, dr = ref.stencil_spmv_dot_ref(xp, stencil=stencil)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), **tols(dt))
+    np.testing.assert_allclose(float(d), float(dr),
+                               rtol=1e-3 if dt == jnp.float32 else 1e-12)
+
+
+@pytest.mark.parametrize("n", [1000, 4096, 5000])
+@pytest.mark.parametrize("dt", DTYPES, ids=str)
+def test_fused_axpby(n, dt):
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    x, y, z, w = (jax.random.normal(k, (n,), dt) for k in ks)
+    a, b, c = (jnp.asarray(v, dt) for v in (0.3, -1.2, 2.0))
+    o = ops.axpbypcz(a, x, b, y, c, z)
+    np.testing.assert_allclose(np.asarray(o),
+                               np.asarray(ref.fused_axpby_ref(a, x, b, y, c, z)),
+                               **tols(dt))
+    o2, d = ops.axpbypcz_dot(a, x, b, y, c, z, w)
+    _, dr = ref.fused_axpby_dot_ref(a, x, b, y, c, z, w)
+    np.testing.assert_allclose(float(d), float(dr),
+                               rtol=1e-3 if dt == jnp.float32 else 1e-12)
+
+
+@pytest.mark.parametrize("dt", DTYPES, ids=str)
+def test_cg_fused_update(dt):
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    r, ar, p, ap = (jax.random.normal(k, (3000,), dt) for k in ks)
+    beta = jnp.asarray(0.7, dt)
+    pn, apn, pd = ops.cg_update(beta, r, ar, p, ap)
+    pnr, apnr, pdr = ref.cg_fused_update_ref(beta, r, ar, p, ap)
+    np.testing.assert_allclose(np.asarray(pn), np.asarray(pnr), **tols(dt))
+    np.testing.assert_allclose(np.asarray(apn), np.asarray(apnr), **tols(dt))
+    np.testing.assert_allclose(float(pd), float(pdr),
+                               rtol=1e-3 if dt == jnp.float32 else 1e-12)
+
+
+@pytest.mark.parametrize("stencil", STENCILS, ids=lambda s: s.name)
+@pytest.mark.parametrize("colour", [0, 1])
+def test_rb_gs_half_sweep(stencil, colour):
+    x = jax.random.normal(jax.random.PRNGKey(4), (8, 8, 8), jnp.float64)
+    b = jax.random.normal(jax.random.PRNGKey(5), (8, 8, 8), jnp.float64)
+    xp = jnp.pad(x, 1)
+    o = ops.gs_half_sweep(xp, b, stencil, colour)
+    orf = ref.rb_gs_half_sweep_ref(xp, b, stencil=stencil, colour=colour)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(orf),
+                               rtol=1e-12, atol=1e-12)
+
+
+@pytest.mark.parametrize("window", [0, 32])
+@pytest.mark.parametrize("dt", [jnp.float32], ids=str)
+def test_flash_attention(window, dt):
+    B, S, H, hd = 2, 128, 4, 16
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q, k, v = (jax.random.normal(kk, (B, S, H, hd), dt) for kk in ks)
+    out = ops.flash_attention(q, k, v, bq=32, bkv=32, window=window)
+    refo = ref.flash_attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(refo),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_flash_attention_shape_sweep():
+    for (B, S, H, hd, bq, bkv) in [(1, 64, 2, 8, 16, 32), (2, 96, 1, 16, 32, 16),
+                                   (1, 256, 2, 32, 64, 64)]:
+        ks = jax.random.split(jax.random.PRNGKey(S), 3)
+        q, k, v = (jax.random.normal(kk, (B, S, H, hd), jnp.float32)
+                   for kk in ks)
+        out = ops.flash_attention(q, k, v, bq=bq, bkv=bkv)
+        refo = ref.flash_attention_ref(q, k, v)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(refo),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_pallas_backed_cg_matches_jnp_backed():
+    """The kernels are drop-in for the solver's matvec hook."""
+    prob = make_problem((16, 16, 16), "27pt")
+    A1 = LocalOp(prob.stencil)
+    A2 = LocalOp(prob.stencil,
+                 matvec_padded=ops.make_matvec_padded(prob.stencil))
+    r1 = SOLVERS["cg"](A1, prob.b(), prob.x0(), tol=1e-6, maxiter=200,
+                       norm_ref=1.0)
+    r2 = SOLVERS["cg"](A2, prob.b(), prob.x0(), tol=1e-6, maxiter=200,
+                       norm_ref=1.0)
+    assert int(r1.iters) == int(r2.iters)
+    np.testing.assert_allclose(np.asarray(r1.x), np.asarray(r2.x),
+                               rtol=1e-10, atol=1e-12)

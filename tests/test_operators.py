@@ -1,0 +1,80 @@
+"""Operator layer: stencil vs ELL vs dense; SPD structure."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.operators import (
+    STENCIL_7PT,
+    STENCIL_27PT,
+    build_dense_from_stencil,
+    build_ell_from_stencil,
+    touched_elements_per_iter,
+)
+
+SHAPES = [(4, 4, 4), (5, 3, 6), (8, 8, 8)]
+
+
+@pytest.mark.parametrize("stencil", [STENCIL_7PT, STENCIL_27PT], ids=lambda s: s.name)
+@pytest.mark.parametrize("shape", SHAPES)
+def test_stencil_matches_ell(stencil, shape):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, shape, jnp.float32)
+    y_st = stencil.matvec(x)
+    ell = build_ell_from_stencil(stencil, shape)
+    y_ell = ell.matvec(x)
+    np.testing.assert_allclose(np.asarray(y_st), np.asarray(y_ell),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("stencil", [STENCIL_7PT, STENCIL_27PT], ids=lambda s: s.name)
+def test_dense_symmetric_positive_definite(stencil):
+    A = build_dense_from_stencil(stencil, (4, 4, 4))
+    np.testing.assert_allclose(A, A.T)
+    w = np.linalg.eigvalsh(A)
+    assert w.min() > 0, "HPCG matrix must be SPD"
+
+
+@pytest.mark.parametrize("stencil", [STENCIL_7PT, STENCIL_27PT], ids=lambda s: s.name)
+def test_matvec_adjoint(stencil):
+    """A symmetric => <Ax, y> == <x, Ay>."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    x = jax.random.normal(k1, (6, 5, 4), jnp.float32)
+    y = jax.random.normal(k2, (6, 5, 4), jnp.float32)
+    lhs = jnp.vdot(stencil.matvec(x), y)
+    rhs = jnp.vdot(x, stencil.matvec(y))
+    np.testing.assert_allclose(float(lhs), float(rhs), rtol=1e-4)
+
+
+def test_offdiag_consistency():
+    x = jax.random.normal(jax.random.PRNGKey(2), (5, 5, 5), jnp.float32)
+    xp = jnp.pad(x, 1)
+    full = STENCIL_27PT.matvec_padded(xp)
+    off = STENCIL_27PT.offdiag_apply_padded(xp)
+    np.testing.assert_allclose(np.asarray(full),
+                               np.asarray(off + STENCIL_27PT.diag * x),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_plane_offdiag_matches_full():
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, 4, 6), jnp.float32)
+    xp = jnp.pad(x, 1)
+    off_full = STENCIL_27PT.offdiag_apply_padded(xp)
+    for k in range(6):
+        plane = STENCIL_27PT.plane_offdiag_apply(xp, k)
+        np.testing.assert_allclose(np.asarray(plane),
+                                   np.asarray(off_full[:, :, k]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_touched_elements_paper_table():
+    """§3.1: CG (12+n)r vs CG-NB (15+n)r; BiCGStab (21+2n)r vs B1 (24+2n)r."""
+    for nbar in (7, 27):
+        assert touched_elements_per_iter("cg_nb", nbar) - \
+            touched_elements_per_iter("cg", nbar) == 3
+        assert touched_elements_per_iter("bicgstab_b1", nbar) - \
+            touched_elements_per_iter("bicgstab", nbar) == 3
+    # the paper's headline relative increases
+    assert abs(3 / (12 + 7) - 0.158) < 1e-2
+    assert abs(3 / (21 + 2 * 7) - 0.086) < 1e-2

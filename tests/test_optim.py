@@ -1,0 +1,68 @@
+"""Optimizer + schedules."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.adamw import adamw, global_norm
+from repro.optim.schedules import constant, cosine, for_arch, wsd
+
+
+def test_adamw_minimises_quadratic():
+    opt = adamw(constant(0.05), weight_decay=0.0)
+    params = {"w": jnp.array([3.0, -2.0, 1.5])}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
+
+    for _ in range(300):
+        g = jax.grad(loss)(params)
+        params, state, _ = opt.update(g, state, params)
+    assert float(loss(params)) < 1e-3
+
+
+def test_grad_clipping():
+    opt = adamw(constant(1e-3), clip_norm=1.0)
+    params = {"w": jnp.zeros(4)}
+    state = opt.init(params)
+    g = {"w": jnp.full(4, 1e6)}
+    p2, state, m = opt.update(g, state, params)
+    assert float(m["grad_norm"]) > 1e6
+    assert np.all(np.isfinite(np.asarray(p2["w"])))
+
+
+def test_moments_dtype_f32_params_preserved():
+    opt = adamw(constant(1e-3))
+    params = {"w": jnp.zeros(4, jnp.bfloat16)}
+    state = opt.init(params)
+    assert state.m["w"].dtype == jnp.float32
+    g = {"w": jnp.ones(4, jnp.bfloat16)}
+    p2, _, _ = opt.update(g, state, params)
+    assert p2["w"].dtype == jnp.bfloat16
+
+
+def test_global_norm():
+    t = {"a": jnp.array([3.0]), "b": jnp.array([4.0])}
+    assert abs(float(global_norm(t)) - 5.0) < 1e-6
+
+
+def test_wsd_shape():
+    f = wsd(1.0, warmup=10, stable=80, decay=10, final_frac=0.1)
+    lrs = [float(f(jnp.asarray(s))) for s in range(0, 110, 1)]
+    assert lrs[5] < 1.0                      # warming up
+    assert abs(lrs[50] - 1.0) < 1e-6         # stable plateau
+    assert lrs[-1] <= 0.1 + 1e-6             # decayed
+    assert max(lrs) <= 1.0 + 1e-6
+
+
+def test_cosine_monotone_decay_after_warmup():
+    f = cosine(1.0, warmup=5, total=100)
+    lrs = [float(f(jnp.asarray(s))) for s in range(5, 100, 5)]
+    assert all(a >= b - 1e-9 for a, b in zip(lrs, lrs[1:]))
+
+
+def test_minicpm_gets_wsd():
+    f = for_arch("minicpm-2b", 1.0, 1000)
+    mid = float(f(jnp.asarray(500)))
+    assert abs(mid - 1.0) < 1e-6  # WSD plateau (cosine would have decayed)

@@ -1,0 +1,123 @@
+"""Property-based tests (hypothesis) on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core.operators import STENCILS
+from repro.core.problems import make_problem
+from repro.core.solvers import SOLVERS, LocalOp
+from repro.distributed.compression import dequantize_int8, quantize_int8
+from repro.models.common import apply_rope, rms_norm, softcap
+
+SETTINGS = dict(max_examples=15, deadline=None,
+                suppress_health_check=[HealthCheck.too_slow])
+
+
+@given(
+    nx=st.integers(3, 8), ny=st.integers(3, 8), nz=st.integers(3, 8),
+    stencil=st.sampled_from(["7pt", "27pt"]),
+    method=st.sampled_from(["cg", "cg_nb", "bicgstab", "bicgstab_b1",
+                            "jacobi"]),
+)
+@settings(**SETTINGS)
+def test_solver_residual_contract(nx, ny, nz, stencil, method):
+    """For any grid/stencil/method: if the solver reports convergence, the
+    REPORTED residual matches the TRUE residual and meets the tolerance."""
+    prob = make_problem((nx, ny, nz), stencil, dtype=jnp.float32)
+    A = LocalOp(prob.stencil)
+    tol = 1e-4
+    res = SOLVERS[method](A, prob.b(), prob.x0(), tol=tol, maxiter=800,
+                          norm_ref=1.0)
+    if int(res.iters) < 800:
+        true_r = float(jnp.linalg.norm(
+            (prob.b() - A.matvec(res.x)).reshape(-1)))
+        assert float(res.res_norm) < tol
+        assert true_r <= 20 * tol  # rounding slack (f32)
+
+
+@given(
+    n=st.integers(1, 2048),
+    scale=st.floats(1e-3, 1e3),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_int8_quantisation_error_bound(n, scale, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n,), jnp.float32) * scale
+    q, s = quantize_int8(x)
+    err = jnp.abs(dequantize_int8(q, s) - x)
+    assert float(err.max()) <= float(s) * 0.5 + 1e-6 * scale
+
+
+@given(
+    b=st.integers(1, 3), s=st.integers(1, 32), h=st.integers(1, 4),
+    hd=st.sampled_from([4, 8, 16]), theta=st.floats(100.0, 1e6),
+    seed=st.integers(0, 1000),
+)
+@settings(**SETTINGS)
+def test_rope_preserves_norm(b, s, h, hd, theta, seed):
+    """RoPE is a rotation: per-(token, head) L2 norms are invariant."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (b, s, h, hd), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    y = apply_rope(x, pos, theta)
+    nx = jnp.linalg.norm(x, axis=-1)
+    ny_ = jnp.linalg.norm(y, axis=-1)
+    np.testing.assert_allclose(np.asarray(nx), np.asarray(ny_),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(cap=st.floats(1.0, 100.0), lo=st.floats(-1e4, 0.0),
+       hi=st.floats(0.0, 1e4))
+@settings(**SETTINGS)
+def test_softcap_bounded_and_monotone(cap, lo, hi):
+    x = jnp.linspace(lo, hi, 64)
+    y = softcap(x, cap)
+    assert float(jnp.max(jnp.abs(y))) <= cap * (1 + 1e-6)
+    d = jnp.diff(y)
+    assert bool(jnp.all(d >= -1e-6))
+
+
+@given(
+    d=st.sampled_from([8, 32, 128]), b=st.integers(1, 4),
+    seed=st.integers(0, 1000), mag=st.floats(0.5, 1e3),
+)
+@settings(**SETTINGS)
+def test_rms_norm_scale_invariance(d, b, seed, mag):
+    """rms_norm(c·x) == rms_norm(x) for c where the eps floor is negligible
+    (eps=1e-6 deliberately breaks invariance for ||x|| -> 0)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (b, d), jnp.float32)
+    scale = jnp.ones((d,), jnp.float32)
+    y1 = rms_norm(x, scale)
+    y2 = rms_norm(x * mag, scale)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=5e-3, atol=5e-3)
+
+
+@given(
+    nx=st.integers(2, 6), ny=st.integers(2, 6), nz=st.integers(2, 6),
+    stencil=st.sampled_from(["7pt", "27pt"]), seed=st.integers(0, 1000),
+)
+@settings(**SETTINGS)
+def test_stencil_linearity(nx, ny, nz, stencil, seed):
+    A = STENCILS[stencil]
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(k1, (nx, ny, nz), jnp.float32)
+    y = jax.random.normal(k2, (nx, ny, nz), jnp.float32)
+    lhs = A.matvec(2.0 * x - 3.0 * y)
+    rhs = 2.0 * A.matvec(x) - 3.0 * A.matvec(y)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(seed=st.integers(0, 10_000), step=st.integers(0, 100),
+       shard=st.integers(0, 7))
+@settings(**SETTINGS)
+def test_pipeline_pure_function_of_seed_step_shard(seed, step, shard):
+    from repro.data.pipeline import SyntheticSource
+    a = SyntheticSource(50_000, seed).tokens(step, shard, 128)
+    b = SyntheticSource(50_000, seed).tokens(step, shard, 128)
+    np.testing.assert_array_equal(a, b)
+    assert a.min() >= 0 and a.max() < 50_000

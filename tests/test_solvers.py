@@ -1,0 +1,102 @@
+"""Solver correctness: convergence, variant equivalence, restart, criteria."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.operators import build_dense_from_stencil
+from repro.core.problems import make_problem
+from repro.core.solvers import SOLVERS, LocalOp, bicgstab_b1, cg, cg_nb
+
+pytestmark = pytest.mark.usefixtures("f64")
+
+SHAPE = (10, 10, 10)
+
+
+@pytest.fixture(scope="module", params=["7pt", "27pt"])
+def problem(request):
+    prob = make_problem(SHAPE, request.param)
+    A = LocalOp(prob.stencil)
+    Ad = build_dense_from_stencil(prob.stencil, SHAPE)
+    xref = np.linalg.solve(Ad, np.asarray(prob.b(), np.float64).reshape(-1))
+    return prob, A, xref.reshape(SHAPE)
+
+
+@pytest.mark.parametrize("method", sorted(SOLVERS))
+def test_converges_to_reference(problem, method):
+    prob, A, xref = problem
+    res = SOLVERS[method](A, prob.b(), prob.x0(), tol=1e-8, maxiter=3000,
+                          norm_ref=1.0)
+    assert int(res.iters) < 3000
+    assert float(res.res_norm) < 1e-8
+    np.testing.assert_allclose(np.asarray(res.x), xref, atol=1e-7)
+
+
+def test_cg_nb_equivalent_to_cg(problem):
+    """Alg. 1 is arithmetically equivalent to classical CG: identical
+    residual histories up to rounding (paper §3.1)."""
+    prob, A, _ = problem
+    r1 = cg(A, prob.b(), prob.x0(), tol=1e-8, maxiter=200, norm_ref=1.0)
+    r2 = cg_nb(A, prob.b(), prob.x0(), tol=1e-8, maxiter=200, norm_ref=1.0)
+    n = int(r1.iters)
+    assert abs(int(r2.iters) - n) <= 1
+    h1 = np.asarray(r1.history)[: n - 1]
+    h2 = np.asarray(r2.history)[: n - 1]
+    np.testing.assert_allclose(h1, h2, rtol=1e-6)
+
+
+def test_bicgstab_b1_matches_classical_solution(problem):
+    prob, A, xref = problem
+    r = bicgstab_b1(A, prob.b(), prob.x0(), tol=1e-8, maxiter=500, norm_ref=1.0)
+    np.testing.assert_allclose(np.asarray(r.x), xref, atol=1e-6)
+
+
+def test_residual_norm_is_true_residual(problem):
+    """The solver's internal residual estimate must match ||b - A x||."""
+    prob, A, _ = problem
+    for method in ("cg", "cg_nb", "bicgstab", "jacobi"):
+        res = SOLVERS[method](A, prob.b(), prob.x0(), tol=1e-8, maxiter=500,
+                              norm_ref=1.0)
+        true_r = float(jnp.linalg.norm(
+            (prob.b() - A.matvec(res.x)).reshape(-1)))
+        assert abs(true_r - float(res.res_norm)) <= 1e-6 * max(true_r, 1.0)
+
+
+def test_iteration_ordering_matches_paper():
+    """Paper §4.1 orders: BiCGStab < CG < symGS < Jacobi (iterations)."""
+    prob = make_problem((24, 24, 24), "27pt")
+    A = LocalOp(prob.stencil)
+    iters = {}
+    for m in ("bicgstab", "cg", "gauss_seidel", "jacobi"):
+        res = SOLVERS[m](A, prob.b(), prob.x0(), tol=1e-6, maxiter=2500,
+                         norm_ref=1.0)
+        iters[m] = int(res.iters)
+    assert iters["bicgstab"] < iters["cg"] < iters["gauss_seidel"] < iters["jacobi"]
+
+
+def test_maxiter_respected():
+    prob = make_problem((8, 8, 8), "27pt")
+    A = LocalOp(prob.stencil)
+    res = SOLVERS["jacobi"](A, prob.b(), prob.x0(), tol=1e-30, maxiter=7,
+                            norm_ref=1.0)
+    assert int(res.iters) == 7
+
+
+def test_relative_vs_absolute_criteria():
+    prob = make_problem((8, 8, 8), "7pt")
+    A = LocalOp(prob.stencil)
+    res_rel = SOLVERS["cg"](A, prob.b(), prob.x0(), tol=1e-6)  # rel to ||b||
+    res_abs = SOLVERS["cg"](A, prob.b(), prob.x0(), tol=1e-6, norm_ref=1.0)
+    assert int(res_abs.iters) >= int(res_rel.iters)
+
+
+def test_history_monotone_for_cg():
+    prob = make_problem((8, 8, 8), "27pt")
+    A = LocalOp(prob.stencil)
+    res = SOLVERS["cg"](A, prob.b(), prob.x0(), tol=1e-8, maxiter=300,
+                        norm_ref=1.0)
+    h = np.asarray(res.history)
+    h = h[~np.isnan(h)]
+    # CG residuals oscillate but must decay overall
+    assert h[-1] < h[0] * 1e-6
