@@ -1,0 +1,24 @@
+# Developer entry points.  `make test` is the tier-1 gate; `make smoke`
+# exercises the solver driver end-to-end on a tiny grid (catches regressions
+# in the repro.api facade / launch path without the full suite).
+
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test smoke bench examples
+
+test:
+	$(PYTHON) -m pytest -x -q
+
+smoke:
+	$(PYTHON) -m repro.launch.solve --maxiter 5 --grid 16 16 16
+	$(PYTHON) -m repro.launch.solve --maxiter 5 --grid 16 16 16 \
+	    --method cg --no-f64 --batch 4
+
+bench:
+	$(PYTHON) -m benchmarks.run
+
+examples:
+	$(PYTHON) examples/quickstart.py
+	$(PYTHON) examples/solver_scaling.py
+	$(PYTHON) examples/serve_batched.py

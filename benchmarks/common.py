@@ -1,37 +1,18 @@
-"""Shared benchmark utilities: timed runs with box-whisker stats (the paper
-reports medians of 10 repetitions), and the TPU v5e hardware model used by
-the scaling/roofline projections."""
+"""Shared benchmark utilities: the TPU v5e hardware model used by the
+scaling/roofline projections, and the repo's CSV line format.
+
+Timing lives in ``repro.api.timing`` (warm-up + ``block_until_ready``; the
+paper reports medians of 10 repetitions); the measured benchmarks reach it
+through ``SolverSession.timed_solve``.
+"""
 
 from __future__ import annotations
-
-import time
-
-import jax
-import numpy as np
 
 # TPU v5e constants (per chip) — the dry-run's target hardware
 PEAK_FLOPS = 197e12          # bf16
 HBM_BW = 819e9               # bytes/s
 ICI_BW = 50e9                # bytes/s/link
 ALLREDUCE_LAT = 5e-6         # base latency per hop-stage (model parameter)
-
-
-def timed(fn, *args, repeats: int = 10, warmup: int = 1):
-    """Median/quartiles of ``repeats`` timed calls (jit'd fn)."""
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    ts = []
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        ts.append(time.perf_counter() - t0)
-    ts = np.array(ts)
-    return {
-        "median": float(np.median(ts)),
-        "q1": float(np.quantile(ts, 0.25)),
-        "q3": float(np.quantile(ts, 0.75)),
-        "min": float(ts.min()),
-    }
 
 
 def csv(name: str, us_per_call: float, derived: str = "") -> None:

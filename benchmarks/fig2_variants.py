@@ -7,6 +7,10 @@ Two parts:
       one iteration of each method and reports per-all-reduce overlap slack
       from the compiled HLO (zero-slack == the blocking barriers the arrows
       mark in the paper's Paraver traces).
+
+Both parts route through ``repro.api``: part (a) uses ``SolverSession`` with
+the facade's warm-up/blocked timing; part (b) uses ``SolverSession.step_fn``
+with the paper-faithful operator options.
 """
 
 from __future__ import annotations
@@ -16,26 +20,28 @@ import os
 import subprocess
 import sys
 
-import jax
+from benchmarks.common import csv
+from repro.api import SolverOptions, SolverSession, variant_pairs
 
-from benchmarks.common import csv, timed
-from repro.core.problems import enable_f64, make_problem
-from repro.core.solvers import SOLVERS, LocalOp
-
+# The "algo" (fusion-disabled) view needs --xla_disable_hlo_passes, which
+# this jaxlib cannot take per-compile (repeated proto field); the parent runs
+# this script twice with the passes disabled via XLA_FLAGS instead.
 _TRACE_SCRIPT = r"""
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=8").strip()
 import sys, json
 sys.path.insert(0, "src")
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding
-from repro.core.problems import make_problem
-from repro.core.distributed import solve_step_shardmap
+from repro.api import SolverOptions, SolverSession
 from repro.analysis.hlo import overlap_slack
+from repro.core.compat import make_mesh
+from repro.core.problems import make_problem
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+view = os.environ.get("TRACE_VIEW", "fused")
+mesh = make_mesh((2, 4), ("data", "model"))
 prob = make_problem((32, 32, 32), "27pt", dtype=jnp.float32)
 b = prob.b()
 out = {}
@@ -43,63 +49,72 @@ for m in ("cg", "cg_nb", "bicgstab", "bicgstab_b1"):
     # paper-faithful implementation for the structural trace (the conv/concat
     # traffic optimisations shift XLA fusion boundaries and obscure the
     # algorithm-level dependence structure)
-    fn, layout = solve_step_shardmap(prob, m, mesh, halo_mode="scatter",
-                                     matvec_padded=prob.stencil.matvec_padded)
+    sess = SolverSession(prob, method=m, mesh=mesh, options=SolverOptions(
+        f64=False, halo_mode="scatter",
+        matvec_padded=prob.stencil.matvec_padded))
+    fn, layout = sess.step_fn()
     sh = NamedSharding(mesh, layout.spec())
     args = [jax.device_put(b, sh)] * 5 + [jnp.array(1.0, jnp.float32)] * 2
-    lowered = jax.jit(fn).lower(*args)
-    res = {}
-    # algorithm-level (fusion-disabled) and compiled-schedule views
-    for view, opts in (("algo", {"xla_disable_hlo_passes":
-                                 "fusion,cpu-instruction-fusion"}),
-                       ("fused", None)):
-        c = lowered.compile(compiler_options=opts) if opts else lowered.compile()
-        rep = [r for r in overlap_slack(c.as_text())
-               if r["op"].startswith("all-reduce")]
-        res[view] = [round(r["slack_bytes"]) for r in rep]
-    out[m] = res
+    c = jax.jit(fn).lower(*args).compile()
+    rep = [r for r in overlap_slack(c.as_text())
+           if r["op"].startswith("all-reduce")]
+    out[m] = {view: [round(r["slack_bytes"]) for r in rep]}
 print(json.dumps(out))
 """
 
 
+def _run_trace(view: str) -> dict | None:
+    env = dict(os.environ)
+    env["TRACE_VIEW"] = view
+    if view == "algo":   # algorithm-level dependence structure, unfused
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                            " --xla_disable_hlo_passes="
+                            "fusion,cpu-instruction-fusion").strip()
+    proc = subprocess.run(
+        [sys.executable, "-c", _TRACE_SCRIPT], capture_output=True, text=True,
+        timeout=560, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    if proc.returncode != 0:
+        csv(f"fig1_trace_{view}", 0.0, f"subprocess_failed:{proc.stderr[-200:]}")
+        return None
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
 def main() -> None:
-    enable_f64()
     n = 64
+    krylov_pairs = [(base, var) for base, var in variant_pairs()
+                    if base in ("cg", "bicgstab")]
     for stencil in ("7pt",):
-        prob = make_problem((n, n, n), stencil)
-        A = LocalOp(prob.stencil)
-        b, x0 = prob.b(), prob.x0()
         base = {}
-        for method in ("cg", "cg_nb", "bicgstab", "bicgstab_b1"):
-            fn = jax.jit(lambda b, x0, m=method: SOLVERS[m](
-                A, b, x0, tol=1e-6, maxiter=700, norm_ref=1.0))
-            res = fn(b, x0)
-            t = timed(fn, b, x0, repeats=10)
-            per_iter = t["median"] / max(int(res.iters), 1)
-            base[method] = t["median"]
-            csv(f"fig2_{stencil}_{method}", t["median"] * 1e6,
-                f"iters={int(res.iters)};per_iter_us={per_iter*1e6:.1f};"
-                f"q1={t['q1']*1e6:.0f};q3={t['q3']*1e6:.0f}")
+        for classical, variant in krylov_pairs:
+            for method in (classical, variant):
+                sess = SolverSession(
+                    method=method, grid=(n, n, n), stencil=stencil,
+                    options=SolverOptions(tol=1e-6, maxiter=700,
+                                          layout="local"))
+                res, t = sess.timed_solve(repeats=10)
+                per_iter = t["median"] / max(int(res.iters), 1)
+                base[method] = t["median"]
+                csv(f"fig2_{stencil}_{method}", t["median"] * 1e6,
+                    f"iters={int(res.iters)};per_iter_us={per_iter*1e6:.1f};"
+                    f"q1={t['q1']*1e6:.0f};q3={t['q3']*1e6:.0f}")
         csv("fig2_cgnb_vs_cg_ratio", 0.0,
             f"ratio={base['cg_nb']/base['cg']:.3f}")
         csv("fig2_b1_vs_bicgstab_ratio", 0.0,
             f"ratio={base['bicgstab_b1']/base['bicgstab']:.3f}")
 
-    # structural barrier trace (Fig. 1 analogue)
-    proc = subprocess.run(
-        [sys.executable, "-c", _TRACE_SCRIPT], capture_output=True, text=True,
-        timeout=560,
-        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
-    if proc.returncode == 0:
-        slacks = json.loads(proc.stdout.strip().splitlines()[-1])
-        vec = 32 ** 3 * 4 // 8
-        for m, views in slacks.items():
-            for view, sl in views.items():
-                hard = sum(1 for s in sl if s < vec)
-                csv(f"fig1_trace_{m}_{view}", 0.0,
-                    f"allreduce_slack_bytes={sl};hard_barriers={hard}")
-    else:
-        csv("fig1_trace", 0.0, f"subprocess_failed:{proc.stderr[-200:]}")
+    # structural barrier trace (Fig. 1 analogue): one subprocess per view
+    slacks: dict = {}
+    for view in ("algo", "fused"):
+        part = _run_trace(view)
+        for m, views in (part or {}).items():
+            slacks.setdefault(m, {}).update(views)
+    vec = 32 ** 3 * 4 // 8
+    for m, views in slacks.items():
+        for view, sl in views.items():
+            hard = sum(1 for s in sl if s < vec)
+            csv(f"fig1_trace_{m}_{view}", 0.0,
+                f"allreduce_slack_bytes={sl};hard_barriers={hard}")
 
 
 if __name__ == "__main__":

@@ -12,14 +12,17 @@ from __future__ import annotations
 
 from benchmarks.common import csv
 from benchmarks.scaling_model import iteration_time
+from repro.api import variant_pairs
 
 CHIPS = (1, 8, 64, 256, 512, 1024, 4096)
 
 
 def main() -> None:
+    # the Krylov (classical, nonblocking-variant) pairs from the registry
+    pairs = [p for p in variant_pairs() if p[0] in ("cg", "bicgstab")]
     for noise in ("tpu", "noisy"):
         for stencil, nbar in (("7pt", 7), ("27pt", 27)):
-            for pair in (("cg", "cg_nb"), ("bicgstab", "bicgstab_b1")):
+            for pair in pairs:
                 # three curves like the paper: MPI-only classical, task-based
                 # classical, task-based nonblocking variant
                 t_ref = iteration_time(pair[0], nbar, (128, 128, 128), 1,

@@ -9,12 +9,9 @@ Part 2: measured iteration counts of the GS variants on CPU (the convergence
 
 from __future__ import annotations
 
-import jax
-
 from benchmarks.common import csv
 from benchmarks.scaling_model import iteration_time
-from repro.core.problems import enable_f64, make_problem
-from repro.core.solvers import SOLVERS, LocalOp
+from repro.api import SolverOptions, SolverSession
 
 CHIPS = (1, 8, 64, 256, 512, 1024, 4096)
 
@@ -35,14 +32,12 @@ def main() -> None:
                     + "/".join(map(str, effs)))
 
     # GS variant convergence (measured)
-    enable_f64()
-    prob = make_problem((48, 48, 48), "27pt")
-    A = LocalOp(prob.stencil)
-    b, x0 = prob.b(), prob.x0()
     counts = {}
     for variant in ("gauss_seidel", "gauss_seidel_rb"):
-        res = jax.jit(lambda b, x0, v=variant: SOLVERS[v](
-            A, b, x0, tol=1e-6, maxiter=1500, norm_ref=1.0))(b, x0)
+        res = SolverSession(
+            method=variant, grid=(48, 48, 48), stencil="27pt",
+            options=SolverOptions(tol=1e-6, maxiter=1500,
+                                  layout="local")).solve()
         counts[variant] = int(res.iters)
         csv(f"fig4d_iters_{variant}", 0.0, f"iters={int(res.iters)}")
     csv("fig4d_variant_ratio", 0.0,

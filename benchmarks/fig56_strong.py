@@ -11,15 +11,18 @@ from __future__ import annotations
 
 from benchmarks.common import csv
 from benchmarks.scaling_model import strong_efficiency
+from repro.api import solver_names
 
 CHIPS = (1, 8, 48, 96, 192, 384, 768, 1536, 3072, 6144)
 
 
 def main() -> None:
+    # every registered method with a scaling-model entry (rb-GS shares the
+    # relaxed-GS curve, so only the relaxed variant is plotted)
+    methods = [m for m in solver_names() if m != "gauss_seidel_rb"]
     for noise in ("tpu", "noisy"):
         for stencil, nbar in (("7pt", 7), ("27pt", 27)):
-            for method in ("cg", "cg_nb", "bicgstab", "bicgstab_b1", "jacobi",
-                           "gauss_seidel"):
+            for method in methods:
                 effs = [round(strong_efficiency(method, nbar, n, noise=noise),
                               4) for n in CHIPS]
                 csv(f"fig56_{noise}_{stencil}_{method}", 0.0,

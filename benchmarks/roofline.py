@@ -113,6 +113,7 @@ def main() -> None:
             f"c={r['compute_s']*1e3:.2f}ms;m={r['memory_s_bf16']*1e3:.2f}ms;"
             f"x={r['collective_s']*1e3:.2f}ms")
 
+    os.makedirs(os.path.dirname(OUT_MD), exist_ok=True)
     with open(OUT_MD, "w") as f:
         f.write("| cell | mesh | compute_s | memory_s(bf16) | collective_s |"
                 " dominant | useful | roofline frac |\n|---|---|---|---|---|"

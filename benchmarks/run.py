@@ -39,7 +39,19 @@ MODULES = {
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, choices=sorted(MODULES))
+    ap.add_argument("--list-methods", action="store_true",
+                    help="print the solver registry (methods + per-iteration "
+                         "communication metadata) and exit")
     args = ap.parse_args()
+    if args.list_methods:
+        from repro.api import REGISTRY
+        for name in sorted(REGISTRY):
+            s = REGISTRY[name]
+            print(f"{name},reductions={s.reductions_per_iter},"
+                  f"blocking={s.blocking_reductions},spmvs={s.spmvs_per_iter},"
+                  f"variant_of={s.variant_of or '-'},"
+                  f"{'stationary' if s.stationary else 'krylov'}")
+        return
     names = [args.only] if args.only else list(MODULES)
     print("name,us_per_call,derived")
     failed = []

@@ -27,6 +27,7 @@ import math
 from dataclasses import dataclass
 
 from benchmarks.common import ALLREDUCE_LAT, HBM_BW, ICI_BW
+from repro.api.registry import REGISTRY
 from repro.core.operators import touched_elements_per_iter
 
 # Noise regimes: per-log2-stage amplification of collective latency.
@@ -46,14 +47,12 @@ class MethodModel:
     # hide kinds: "none" (blocking), "spmv", "vec" (one vector update)
 
 
+#: derived from the solver registry — the per-iteration communication
+#: structure is method metadata, declared once in repro.api.registry.
 METHODS = {
-    "jacobi": MethodModel("jacobi", 1, (("none",),)),
-    "gauss_seidel": MethodModel("gauss_seidel", 2, (("none",),)),
-    "cg": MethodModel("cg", 1, (("none",), ("vec",))),
-    "cg_nb": MethodModel("cg_nb", 1, (("spmv",), ("vec",))),
-    "bicgstab": MethodModel("bicgstab", 2, (("none",), ("none",), ("vec",))),
-    "bicgstab_b1": MethodModel("bicgstab_b1", 2,
-                               (("none",), ("vec",), ("vec",))),
+    name: MethodModel(name, spec.spmvs_per_iter,
+                      tuple((h,) for h in spec.reduction_hides))
+    for name, spec in REGISTRY.items()
 }
 
 

@@ -12,11 +12,8 @@ from __future__ import annotations
 
 import os
 
-import jax
-
-from benchmarks.common import csv, timed
-from repro.core.problems import enable_f64, make_problem
-from repro.core.solvers import SOLVERS, LocalOp
+from benchmarks.common import csv
+from repro.api import SolverOptions, SolverSession
 
 PAPER = {
     ("7pt", "bicgstab"): 8, ("7pt", "cg"): 12,
@@ -27,21 +24,16 @@ PAPER = {
 
 
 def main() -> None:
-    enable_f64()
     n = 128 if os.environ.get("BENCH_FULL") else 64
+    opts = SolverOptions(tol=1e-6, maxiter=700, layout="local")
     for stencil in ("7pt", "27pt"):
-        prob = make_problem((n, n, n), stencil)
-        A = LocalOp(prob.stencil)
-        b, x0 = prob.b(), prob.x0()
         for method in ("bicgstab", "cg", "gauss_seidel", "jacobi"):
-            fn = jax.jit(lambda b, x0, m=method: SOLVERS[m](
-                A, b, x0, tol=1e-6, maxiter=700, norm_ref=1.0))
-            res = fn(b, x0)
-            iters = int(res.iters)
-            t = timed(fn, b, x0, repeats=3)
+            sess = SolverSession(method=method, grid=(n, n, n),
+                                 stencil=stencil, options=opts)
+            res, t = sess.timed_solve(repeats=3)
             csv(f"iters_{stencil}_{method}_{n}^3",
                 t["median"] * 1e6,
-                f"iters={iters};paper128={PAPER[(stencil, method)]};"
+                f"iters={int(res.iters)};paper128={PAPER[(stencil, method)]};"
                 f"res={float(res.res_norm):.2e}")
 
 

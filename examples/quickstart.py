@@ -1,41 +1,37 @@
-"""Quickstart: the paper in 60 seconds.
+"""Quickstart: the paper in 60 seconds, through the unified facade.
 
-Solves the HPCG system with classical CG and the paper's nonblocking CG-NB,
-shows they are arithmetically equivalent, and prints the per-iteration
-barrier structure that is the paper's whole point.
+Solves the HPCG system with every registered method via ``repro.api.solve``
+(one entry point — the same call runs local, sharded, or Pallas-backed),
+shows CG and the paper's nonblocking CG-NB are arithmetically equivalent,
+and prints the per-iteration barrier structure straight from the solver
+registry's metadata — the paper's whole point.
 
 PYTHONPATH=src python examples/quickstart.py
 """
 
-import jax
-
-from repro.core import LocalOp, SOLVERS, make_problem, enable_f64
+from repro.api import REGISTRY, SolverOptions, solve, solver_names
 from repro.core.operators import touched_elements_per_iter
 
-enable_f64()
+opts = SolverOptions(tol=1e-6, maxiter=700)
 
-# the paper's system: 27-pt stencil on a hexahedral grid, b s.t. x* = 1
-prob = make_problem((48, 48, 48), "27pt")
-A = LocalOp(prob.stencil)
-b, x0 = prob.b(), prob.x0()
-
-print("method        iters  residual   ||x-1||_inf  extra traffic")
+print("method           iters  residual   ||x-1||_inf  extra traffic")
 for method in ("cg", "cg_nb", "bicgstab", "bicgstab_b1", "gauss_seidel",
-               "jacobi"):
-    res = jax.jit(lambda b, x0, m=method: SOLVERS[m](
-        A, b, x0, tol=1e-6, maxiter=700, norm_ref=1.0))(b, x0)
+               "gauss_seidel_rb", "jacobi"):
+    assert method in solver_names()
+    # the paper's system: 27-pt stencil on a hexahedral grid, b s.t. x* = 1
+    res = solve(method=method, grid=(48, 48, 48), stencil="27pt",
+                options=opts)
     err = float(abs(res.x - 1.0).max())
-    t = touched_elements_per_iter(
-        method if "gauss" not in method and method != "jacobi" else method, 27)
-    print(f"{method:13s} {int(res.iters):5d}  {float(res.res_norm):9.2e}"
+    t = touched_elements_per_iter(method, 27)
+    print(f"{method:16s} {int(res.iters):5d}  {float(res.res_norm):9.2e}"
           f"  {err:11.2e}  ({t} elems/row/iter)")
 
-print("""
-Barrier structure per iteration (the paper's contribution):
-  cg          : 2 reductions, 1 is a hard barrier (zero overlap slack)
-  cg_nb       : 2 reductions, 0 hard barriers — r·r rides behind the SpMV,
-                Ap·p behind the lagged x update          (Alg. 1)
-  bicgstab    : 3 reductions, 2 hard barriers
-  bicgstab_b1 : 3 reductions, 1 hard barrier (alpha_d)   (Alg. 2)
-Run `python -m benchmarks.run --only fig2_variants` for the measured traces.
-""")
+print("\nBarrier structure per iteration (from repro.api.REGISTRY):")
+for name in ("cg", "cg_nb", "bicgstab", "bicgstab_b1"):
+    spec = REGISTRY[name]
+    hides = ", ".join(spec.reduction_hides)
+    variant = f"  (variant of {spec.variant_of})" if spec.variant_of else ""
+    print(f"  {name:12s}: {spec.reductions_per_iter} reductions "
+          f"({hides}) -> {spec.blocking_reductions} hard barrier(s){variant}")
+print("Run `python -m benchmarks.run --only fig2_variants` for the "
+      "measured traces.")

@@ -1,14 +1,55 @@
-"""Batched serving example: prefill + autoregressive decode with KV caches.
+"""Batched solver serving: many right-hand sides, one compiled call.
 
-Demonstrates the serve path for a dense GQA arch and the SSM decode path
-(constant-state) for mamba2 — the mechanism behind the long_500k cells.
+The serving workload for the paper's solvers: a traffic burst of independent
+systems sharing one operator (same stencil, same grid — e.g. one PDE, many
+boundary conditions/timesteps).  ``repro.api.solve_batched`` vmaps the solver
+over the batch — locally on one device, *inside* shard_map on a mesh — so the
+whole burst is a single XLA program: one compile, one dispatch, and each
+iteration's reduction stays one collective for the entire batch.  JAX masks
+finished lanes, so every RHS converges exactly as it would alone.
+
+(The LM serving demo formerly here lives at ``python -m repro.launch.serve``.)
 
 PYTHONPATH=src python examples/serve_batched.py
 """
 
-from repro.launch import serve as serve_mod
+import time
 
-for arch in ("internlm2-1.8b", "mamba2-780m"):
-    print(f"=== {arch} (reduced) ===")
-    serve_mod.main(["--arch", arch, "--reduced", "--batch", "4",
-                    "--prompt-len", "32", "--gen", "16"])
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.api import SolverOptions, SolverSession
+
+BATCH = 8
+GRID = (32, 32, 32)
+
+sess = SolverSession(method="bicgstab_b1", grid=GRID, stencil="27pt",
+                     options=SolverOptions(tol=1e-6, maxiter=400,
+                                           norm_ref=None))
+print(f"serving session: {sess.describe()}  batch={BATCH}")
+
+rng = np.random.default_rng(0)
+bs = jnp.asarray(rng.standard_normal((BATCH, *GRID)),
+                 dtype=sess.problem.b().dtype)
+
+res, stats = sess.timed_solve_batched(bs, repeats=3)   # warm-up compiles
+iters = np.asarray(res.iters)
+norms = np.asarray(res.res_norm)
+print(f"one compiled call: {BATCH} solves in {stats['median']*1e3:.1f} ms "
+      f"(median of 3)")
+for i in range(BATCH):
+    print(f"  rhs[{i}]: iters={int(iters[i]):3d}  ||r||={norms[i]:.2e}")
+
+# the naive serving loop, for contrast: one dispatch per request
+# (warmed + blocked, so this measures execution, not compile/async dispatch)
+jax.block_until_ready(sess.solve(b=bs[0]))
+t0 = time.perf_counter()
+for i in range(BATCH):
+    jax.block_until_ready(sess.solve(b=bs[i]))
+loop_s = time.perf_counter() - t0
+print(f"sequential loop: {loop_s*1e3:.1f} ms for {BATCH} requests "
+      f"(batched/loop = {stats['median']/loop_s:.2f})")
+print("(on CPU the batched lanes pad to the slowest RHS; the batched win "
+      "comes on accelerators, where one dispatch and one collective per "
+      "iteration serve the whole batch)")

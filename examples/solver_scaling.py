@@ -1,9 +1,10 @@
 """Distributed solver demo: the paper's weak-scaling experiment in miniature.
 
-Spawns a subprocess with 8 host devices, decomposes the grid like HPCCG
-(1-D over z), runs CG-NB under shard_map, and verifies it matches the
-single-device solve; then prints the TPU-projected weak-scaling table from
-the roofline model.
+Spawns a subprocess with 8 host devices and runs CG-NB twice through the SAME
+``repro.api.solve`` call — once forced local, once on the paper-faithful 1-D
+z decomposition (``layout="1d"`` resolves to shard_map over all 8 devices) —
+and verifies the two backends agree; then prints the TPU-projected
+weak-scaling table from the roofline model.
 
 PYTHONPATH=src python examples/solver_scaling.py
 """
@@ -17,20 +18,13 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import sys
 sys.path.insert(0, "src")
-import jax
-jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp
-from jax.sharding import NamedSharding
-from repro.core import make_problem, solve_shardmap, LocalOp, SOLVERS
-from repro.launch.mesh import make_solver_mesh
+from repro.api import SolverOptions, solve
 
-mesh = make_solver_mesh(8)                      # paper-faithful 1-D layout
-prob = make_problem((32, 32, 64), "27pt")
-fn, layout = solve_shardmap(prob, "cg_nb", mesh, tol=1e-6, maxiter=300)
-sh = NamedSharding(mesh, layout.spec())
-res = jax.jit(fn)(jax.device_put(prob.b(), sh), jax.device_put(prob.x0(), sh))
-ref = SOLVERS["cg_nb"](LocalOp(prob.stencil), prob.b(), prob.x0(),
-                       tol=1e-6, maxiter=300, norm_ref=1.0)
+opts = SolverOptions(tol=1e-6, maxiter=300)
+kw = dict(method="cg_nb", grid=(32, 32, 64), stencil="27pt", options=opts)
+res = solve(layout="1d", **kw)       # shard_map over 8 devices (HPCCG layout)
+ref = solve(layout="local", **kw)    # single-device reference
 print(f"distributed: iters={int(res.iters)} res={float(res.res_norm):.2e}  "
       f"(single-device: iters={int(ref.iters)}) "
       f"max|dx|={float(jnp.abs(res.x-ref.x).max()):.2e}")

@@ -1,0 +1,33 @@
+# Unified solver facade (docs/API.md): one entry point for local, sharded
+# and Pallas-backed solves, with batched multi-RHS support for serving.
+from repro.api.backend import Backend, resolve_backend, resolve_matvec
+from repro.api.options import LAYOUTS, SolverOptions
+from repro.api.registry import (
+    REGISTRY,
+    SolverSpec,
+    get_solver,
+    register_solver,
+    solver_names,
+    variant_pairs,
+)
+from repro.api.session import SolverSession, solve, solve_batched
+from repro.api.timing import timed, timed_result
+
+__all__ = [
+    "Backend",
+    "LAYOUTS",
+    "REGISTRY",
+    "SolverOptions",
+    "SolverSession",
+    "SolverSpec",
+    "get_solver",
+    "register_solver",
+    "resolve_backend",
+    "resolve_matvec",
+    "solve",
+    "solve_batched",
+    "solver_names",
+    "timed",
+    "timed_result",
+    "variant_pairs",
+]

@@ -1,0 +1,74 @@
+"""Typed solver options — the one configuration object the facade accepts.
+
+Replaces the ad-hoc kwargs previously threaded through ``launch/solve.py``,
+``configs/hpcg.py`` and every benchmark driver.  Everything the seven solvers
+and the two execution worlds (local / shard_map) understand is named here;
+call sites stop inventing their own flag spellings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+
+#: accepted ``layout`` values and what they resolve to (see backend.py)
+LAYOUTS = ("auto", "local", "1d", "2d", "3d")
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverOptions:
+    """Everything that parameterises a solve, minus the problem itself.
+
+    Attributes
+    ----------
+    tol:          convergence tolerance (relative to ``norm_ref``).
+    maxiter:      iteration cap.
+    f64:          build facade-constructed problems in double precision (the
+                  paper's setting).  Only consulted when the facade builds
+                  the problem from ``grid``/``stencil``: it then calls
+                  ``enable_f64()``, which flips the PROCESS-GLOBAL
+                  ``jax_enable_x64`` flag (a JAX limitation — x64 is not a
+                  per-computation switch).  A problem you pass in is
+                  authoritative: its dtype is used as-is and no global
+                  state is touched.
+    layout:       device decomposition: ``"auto"`` (local on 1 device, else
+                  the paper-faithful 1-D z split), ``"local"``, ``"1d"``,
+                  ``"2d"`` (data×model mesh), ``"3d"`` (pod×data×model).
+    pallas:       back the local stencil SpMV with the Pallas kernel.
+    norm_ref:     residual normalisation; ``1.0`` = the paper's absolute
+                  HPCCG criterion, ``None`` = relative to ``||b||``.
+    dot:          override the reduction used by the solver (local path
+                  only; the distributed path always uses the layout's psum).
+    halo_mode:    halo-exchange strategy for the distributed operator
+                  (``"auto"`` | ``"concat"`` | ``"scatter"``).
+    matvec_padded: override the padded-operand SpMV (wins over ``pallas``).
+    dims_map:     explicit grid-dim -> mesh-axis mapping (advanced; wins
+                  over ``layout`` when a mesh is supplied).
+    """
+
+    tol: float = 1e-6
+    maxiter: int = 600
+    f64: bool = True
+    layout: str = "auto"
+    pallas: bool = False
+    norm_ref: float | None = 1.0
+    dot: Callable | None = None
+    halo_mode: str = "auto"
+    matvec_padded: Callable | None = None
+    dims_map: dict[str, str | None] | None = None
+
+    def __post_init__(self):
+        if self.layout not in LAYOUTS:
+            raise ValueError(
+                f"unknown layout {self.layout!r}; options: {LAYOUTS}")
+        if self.maxiter < 0:
+            raise ValueError(f"maxiter must be >= 0, got {self.maxiter}")
+
+    def replace(self, **kw) -> "SolverOptions":
+        return dataclasses.replace(self, **kw)
+
+    def solver_kwargs(self) -> dict:
+        """The kwargs every solver in the registry accepts."""
+        return dict(tol=self.tol, maxiter=self.maxiter,
+                    norm_ref=self.norm_ref)

@@ -1,0 +1,134 @@
+"""Solver registry: methods + the metadata the paper reasons about.
+
+Subsumes the bare ``SOLVERS`` / ``VARIANT_OF`` dicts in ``core.solvers``:
+each entry carries the per-iteration communication structure (reductions,
+how each one hides, SpMV count) that drives the scaling model and the
+barrier-structure reporting, plus solver-selection facts (SPD requirement,
+stationary vs Krylov, which classical method a variant descends from).
+
+New methods register once here and every driver — launch, benchmarks,
+examples, the dry-run — picks them up.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from repro.core import solvers as _solvers
+
+#: how a reduction's latency is hidden (the scaling model's terms):
+#: "none" = blocking barrier, "vec" = overlapped with one vector update,
+#: "spmv" = overlapped with the SpMV.
+HideKind = str
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverSpec:
+    """A solver plus the metadata the drivers and models need."""
+
+    name: str
+    fn: Callable                      # (A, b, x0, *, tol, maxiter, dot, norm_ref)
+    reduction_hides: tuple[HideKind, ...]
+    spmvs_per_iter: int
+    variant_of: str | None = None     # classical baseline this method refines
+    spd_required: bool = False
+    stationary: bool = False          # Jacobi/GS family (vs Krylov)
+    description: str = ""
+
+    @property
+    def reductions_per_iter(self) -> int:
+        return len(self.reduction_hides)
+
+    @property
+    def blocking_reductions(self) -> int:
+        """Reductions with no overlap window (the paper's hard barriers)."""
+        return sum(1 for h in self.reduction_hides if h == "none")
+
+
+REGISTRY: dict[str, SolverSpec] = {}
+
+
+def register_solver(spec: SolverSpec) -> SolverSpec:
+    if spec.name in REGISTRY:
+        raise ValueError(f"solver {spec.name!r} already registered")
+    if spec.variant_of is not None and spec.variant_of not in REGISTRY:
+        raise ValueError(
+            f"{spec.name!r}: unknown baseline {spec.variant_of!r} "
+            f"(register the classical method first)")
+    REGISTRY[spec.name] = spec
+    return spec
+
+
+def get_solver(name: str) -> SolverSpec:
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown method {name!r}; options: {sorted(REGISTRY)}") from None
+
+
+def solver_names() -> list[str]:
+    return sorted(REGISTRY)
+
+
+def variant_pairs() -> list[tuple[str, str]]:
+    """(classical, variant) pairs — the paper's side-by-side comparisons."""
+    return sorted((s.variant_of, s.name) for s in REGISTRY.values()
+                  if s.variant_of is not None)
+
+
+# --- the seven methods of the paper ------------------------------------------
+# Reduction structure per §3.1/Fig. 1; SpMV counts per the touched-elements
+# model.  Stationary methods report one residual-norm reduction per sweep.
+
+register_solver(SolverSpec(
+    name="jacobi", fn=_solvers.jacobi,
+    reduction_hides=("none",), spmvs_per_iter=1, stationary=True,
+    description="x += D^-1 r; 1 SpMV + 1 blocking residual reduction"))
+
+register_solver(SolverSpec(
+    name="gauss_seidel_rb", fn=_solvers.sym_gauss_seidel_rb,
+    reduction_hides=("none",), spmvs_per_iter=2, stationary=True,
+    description="red-black coloured symmetric Gauss-Seidel (§3.4)"))
+
+register_solver(SolverSpec(
+    name="gauss_seidel", fn=_solvers.sym_gauss_seidel_relaxed,
+    reduction_hides=("none",), spmvs_per_iter=2, stationary=True,
+    variant_of="gauss_seidel_rb",
+    description="relaxed tasked symmetric GS (§3.4 Code 4, TPU adaptation)"))
+
+register_solver(SolverSpec(
+    name="cg", fn=_solvers.cg,
+    reduction_hides=("none", "vec"), spmvs_per_iter=1, spd_required=True,
+    description="classical conjugate gradient (2 blocking reductions)"))
+
+register_solver(SolverSpec(
+    name="cg_nb", fn=_solvers.cg_nb,
+    reduction_hides=("spmv", "vec"), spmvs_per_iter=1, spd_required=True,
+    variant_of="cg",
+    description="nonblocking CG (Alg. 1): both reductions off the critical path"))
+
+register_solver(SolverSpec(
+    name="bicgstab", fn=_solvers.bicgstab,
+    reduction_hides=("none", "none", "vec"), spmvs_per_iter=2,
+    description="classical BiCGStab (3 blocking reductions)"))
+
+register_solver(SolverSpec(
+    name="bicgstab_b1", fn=_solvers.bicgstab_b1,
+    reduction_hides=("none", "vec", "vec"), spmvs_per_iter=2,
+    variant_of="bicgstab",
+    description="BiCGStab one-blocking (Alg. 2) with restart"))
+
+
+def _check_consistent_with_core() -> None:
+    """The registry must cover exactly what core.solvers exports."""
+    assert set(REGISTRY) == set(_solvers.SOLVERS), (
+        sorted(REGISTRY), sorted(_solvers.SOLVERS))
+    for name, spec in REGISTRY.items():
+        assert spec.fn is _solvers.SOLVERS[name], name
+    for variant, base in _solvers.VARIANT_OF.items():
+        assert REGISTRY[variant].variant_of == base, (variant, base)
+
+
+_check_consistent_with_core()

@@ -1,0 +1,246 @@
+"""The solver facade: one entry point for every execution world.
+
+``SolverSession`` binds (problem, method, options) to a resolved backend and
+compiles the solve once; ``solve()`` / ``solve_batched()`` are the one-shot
+conveniences.  The paper's "write the algorithm once, swap the parallelisation
+underneath" now holds at the user surface too:
+
+    from repro.api import solve, SolverOptions
+    res = solve(method="cg_nb", grid=(64, 64, 64), stencil="27pt",
+                options=SolverOptions(tol=1e-6, maxiter=600))
+
+runs ``LocalOp`` on one device, the paper-faithful 1-D shard_map decomposition
+on many, and the Pallas stencil kernel when ``options.pallas`` is set — with
+identical ``SolveResult`` semantics everywhere.
+
+``solve_batched`` is the serving path: many right-hand sides solved in ONE
+compiled call.  Locally the solver is vmapped; on a mesh the vmap happens
+*inside* shard_map, so the batch rides the same halo exchanges and each
+reduction stays one ``psum`` per iteration for the whole batch.  JAX's
+batching rule for ``while_loop`` masks finished lanes, so each RHS converges
+exactly as it would alone (same iteration count, same iterates).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.api.backend import Backend, resolve_backend, resolve_matvec
+from repro.api.options import SolverOptions
+from repro.api.registry import SolverSpec, get_solver
+from repro.api.timing import timed_result
+from repro.core.compat import shard_map
+from repro.core.distributed import DistributedOp, solve_shardmap, solve_step_shardmap
+from repro.core.problems import HPCGProblem, enable_f64, make_problem
+from repro.core.solvers import LocalOp, SolveResult
+
+
+class SolverSession:
+    """A problem + method + options bound to a resolved backend.
+
+    Reuse a session to amortise compilation across repeated solves (the
+    serving loop); use the module-level :func:`solve` for one-offs.
+    """
+
+    def __init__(self, problem: HPCGProblem | None = None, *,
+                 method: str = "cg_nb",
+                 grid: tuple[int, int, int] | None = None,
+                 stencil: str = "27pt",
+                 options: SolverOptions | None = None,
+                 mesh: Mesh | None = None,
+                 backend: Backend | None = None):
+        self.options = options or SolverOptions()
+        if problem is None:
+            if grid is None:
+                raise ValueError("need either a problem or a grid")
+            if self.options.f64:
+                enable_f64()
+                dtype = None
+            else:
+                dtype = jnp.float32
+            problem = make_problem(tuple(grid), stencil, dtype=dtype)
+        self.problem = problem
+        self.spec: SolverSpec = get_solver(method)
+        self.backend: Backend = backend or resolve_backend(self.options,
+                                                           mesh=mesh)
+        self._matvec = resolve_matvec(problem.stencil, self.options)
+        self._fn = None          # compiled single-RHS solve
+        self._batched_fn = None  # compiled multi-RHS solve
+
+    # -- introspection --------------------------------------------------------
+    @property
+    def method(self) -> str:
+        return self.spec.name
+
+    @property
+    def layout(self):
+        return self.backend.layout
+
+    def describe(self) -> str:
+        return (f"{self.method}/{self.problem.stencil.name} "
+                f"grid={self.problem.shape} on {self.backend.describe()}"
+                f"{' [pallas]' if self.options.pallas else ''}")
+
+    # -- single-RHS path ------------------------------------------------------
+    def _build_fn(self):
+        opts = self.options
+        if self.backend.kind == "local":
+            A = LocalOp(self.problem.stencil, matvec_padded=self._matvec)
+
+            def run(b, x0):
+                return self.spec.fn(A, b, x0, dot=opts.dot,
+                                    **opts.solver_kwargs())
+
+            return jax.jit(run)
+        fn, _ = solve_shardmap(
+            self.problem, self.method, self.backend.mesh,
+            dims_map=opts.dims_map, tol=opts.tol, maxiter=opts.maxiter,
+            norm_ref=opts.norm_ref, matvec_padded=self._matvec,
+            halo_mode=opts.halo_mode)
+        return jax.jit(fn)
+
+    def _place(self, x: jax.Array, *, batched: bool = False) -> jax.Array:
+        sh = self.backend.sharding()
+        if sh is None:
+            return x
+        if batched:
+            sh = NamedSharding(self.backend.mesh,
+                               P(None, *self.layout.dim_axes))
+        return jax.device_put(x, sh)
+
+    def solve(self, b: jax.Array | None = None,
+              x0: jax.Array | None = None) -> SolveResult:
+        if self._fn is None:
+            self._fn = self._build_fn()
+        b = self.problem.b() if b is None else b
+        x0 = self.problem.x0() if x0 is None else x0
+        return self._fn(self._place(b), self._place(x0))
+
+    def timed_solve(self, b: jax.Array | None = None,
+                    x0: jax.Array | None = None, *,
+                    repeats: int = 10,
+                    warmup: int = 1) -> tuple[SolveResult, dict[str, float]]:
+        """Solve with honest wall-clock stats: warm-up (compile) happens
+        outside the timed region and every call blocks until ready."""
+        if self._fn is None:
+            self._fn = self._build_fn()
+        b = self._place(self.problem.b() if b is None else b)
+        x0 = self._place(self.problem.x0() if x0 is None else x0)
+        return timed_result(self._fn, b, x0, repeats=repeats, warmup=warmup)
+
+    # -- batched multi-RHS path (the serving workload) ------------------------
+    def _build_batched_fn(self):
+        opts = self.options
+        if self.backend.kind == "local":
+            A = LocalOp(self.problem.stencil, matvec_padded=self._matvec)
+
+            def run(b, x0):
+                return self.spec.fn(A, b, x0, dot=opts.dot,
+                                    **opts.solver_kwargs())
+
+            return jax.jit(jax.vmap(run))
+
+        layout = self.layout
+        stencil = self.problem.stencil
+
+        def local_solve(b_loc, x0_loc):
+            op = DistributedOp(stencil, layout, matvec_padded=self._matvec,
+                               halo_mode=opts.halo_mode)
+            return self.spec.fn(op, b_loc, x0_loc, dot=op.dot,
+                                **opts.solver_kwargs())
+
+        bspec = P(None, *layout.dim_axes)
+        fn = shard_map(
+            jax.vmap(local_solve),
+            mesh=self.backend.mesh,
+            in_specs=(bspec, bspec),
+            out_specs=SolveResult(x=bspec, iters=P(), res_norm=P(),
+                                  history=P()),
+        )
+        return jax.jit(fn)
+
+    def _prep_batched(self, bs, x0s):
+        """Validate + place a batch and return (fn, bs, x0s)."""
+        if bs.ndim != 4:
+            raise ValueError(f"bs must be (batch, nx, ny, nz), got {bs.shape}")
+        if bs.shape[1:] != self.problem.shape:
+            raise ValueError(
+                f"RHS grid {bs.shape[1:]} != problem grid {self.problem.shape}")
+        if self._batched_fn is None:
+            self._batched_fn = self._build_batched_fn()
+        if x0s is None:
+            x0s = jnp.zeros_like(bs)
+        return (self._batched_fn, self._place(bs, batched=True),
+                self._place(x0s, batched=True))
+
+    def solve_batched(self, bs: jax.Array,
+                      x0s: jax.Array | None = None) -> SolveResult:
+        """Solve ``bs.shape[0]`` right-hand sides in one compiled call.
+
+        ``bs``/``x0s``: (batch, nx, ny, nz); ``x0s`` defaults to zeros.
+        Returns a ``SolveResult`` whose leaves carry a leading batch axis.
+        """
+        fn, bs, x0s = self._prep_batched(bs, x0s)
+        return fn(bs, x0s)
+
+    def timed_solve_batched(self, bs: jax.Array,
+                            x0s: jax.Array | None = None, *,
+                            repeats: int = 10, warmup: int = 1
+                            ) -> tuple[SolveResult, dict[str, float]]:
+        """:meth:`solve_batched` with honest wall-clock stats."""
+        fn, bs, x0s = self._prep_batched(bs, x0s)
+        return timed_result(fn, bs, x0s, repeats=repeats, warmup=warmup)
+
+    # -- analysis path (dry-run / roofline / barrier traces) ------------------
+    def step_fn(self):
+        """One solver *iteration* as a shard_mapped fn (exact cost analysis;
+        see ``core.distributed.solve_step_shardmap``).  Mesh backends only."""
+        if self.backend.kind != "shard_map":
+            raise ValueError("step_fn needs a mesh backend")
+        return solve_step_shardmap(
+            self.problem, self.method, self.backend.mesh,
+            dims_map=self.options.dims_map, matvec_padded=self._matvec,
+            halo_mode=self.options.halo_mode)
+
+
+# -- one-shot facades ---------------------------------------------------------
+
+def _session(problem, method, grid, stencil, options, mesh,
+             overrides: dict[str, Any]) -> SolverSession:
+    options = options or SolverOptions()
+    if overrides:
+        options = options.replace(**overrides)
+    return SolverSession(problem, method=method, grid=grid, stencil=stencil,
+                         options=options, mesh=mesh)
+
+
+def solve(problem: HPCGProblem | None = None, *, method: str = "cg_nb",
+          grid: tuple[int, int, int] | None = None, stencil: str = "27pt",
+          options: SolverOptions | None = None, mesh: Mesh | None = None,
+          b: jax.Array | None = None, x0: jax.Array | None = None,
+          **overrides) -> SolveResult:
+    """Solve one system.  ``**overrides`` are ``SolverOptions`` fields
+    (``tol=``, ``maxiter=``, ``pallas=``, ...) applied on top of ``options``."""
+    sess = _session(problem, method, grid, stencil, options, mesh, overrides)
+    return sess.solve(b=b, x0=x0)
+
+
+def solve_batched(bs: jax.Array, problem: HPCGProblem | None = None, *,
+                  method: str = "cg_nb",
+                  grid: tuple[int, int, int] | None = None,
+                  stencil: str = "27pt",
+                  options: SolverOptions | None = None,
+                  mesh: Mesh | None = None,
+                  x0s: jax.Array | None = None,
+                  **overrides) -> SolveResult:
+    """Solve a batch of right-hand sides in one compiled call."""
+    if bs.ndim != 4:
+        raise ValueError(f"bs must be (batch, nx, ny, nz), got {bs.shape}")
+    if grid is None and problem is None:
+        grid = tuple(bs.shape[1:])
+    sess = _session(problem, method, grid, stencil, options, mesh, overrides)
+    return sess.solve_batched(bs, x0s=x0s)

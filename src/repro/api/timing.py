@@ -1,0 +1,44 @@
+"""Shared wall-clock helper for every driver and benchmark.
+
+JAX dispatch is asynchronous and the first call compiles: ``time.time()``
+around a bare ``jit`` call measures compile+dispatch, not execution.  This
+helper does it right once — warm-up calls first (compile outside the timed
+region), ``block_until_ready`` inside it — and reports the box-whisker stats
+the paper uses (median/quartiles of repeated runs).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+
+def timed(fn: Callable, *args, repeats: int = 10,
+          warmup: int = 1) -> dict[str, float]:
+    """Median/quartile seconds of ``repeats`` fully-blocked calls."""
+    _, stats = timed_result(fn, *args, repeats=repeats, warmup=warmup)
+    return stats
+
+
+def timed_result(fn: Callable, *args, repeats: int = 10,
+                 warmup: int = 1) -> tuple[Any, dict[str, float]]:
+    """Like :func:`timed` but also returns the (last) result of ``fn``."""
+    out = None
+    for _ in range(warmup):
+        out = jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts = np.array(ts)
+    return out, {
+        "median": float(np.median(ts)),
+        "q1": float(np.quantile(ts, 0.25)),
+        "q3": float(np.quantile(ts, 0.75)),
+        "min": float(ts.min()),
+        "mean": float(ts.mean()),
+    }

@@ -1,9 +1,12 @@
 """The paper's own workload: HPCG sparse systems + solver selection.
 
-Not an LM architecture — this config drives launch/solve.py and the solver
-benchmarks.  Weak-scaling sizes follow §4.1: 128^3 per device (the paper uses
-128x128x128 per MPI rank and 128x128x3072 per hybrid socket); strong scaling
-uses the fixed 128x128x6144 grid.
+Not an LM architecture — these named cells drive launch/solve.py, the
+solver benchmarks and the dry-run.  Weak-scaling sizes follow §4.1: 128^3
+per device (the paper uses 128x128x128 per MPI rank and 128x128x3072 per
+hybrid socket); strong scaling uses the fixed 128x128x6144 grid.
+
+A ``SolverConfig`` is declarative; ``to_options()`` / ``session()`` turn a
+cell into the typed ``repro.api`` objects that actually run it.
 """
 import dataclasses
 
@@ -11,12 +14,28 @@ import dataclasses
 @dataclasses.dataclass(frozen=True)
 class SolverConfig:
     name: str
-    method: str                  # repro.core.solvers.SOLVERS key
+    method: str                  # repro.api registry key
     stencil: str                 # "7pt" | "27pt"
     local_grid: tuple[int, int, int] = (128, 128, 128)
     tol: float = 1e-6
     maxiter: int = 600
     weak_scaling: bool = True    # grid grows with devices (along mapped dims)
+
+    def to_options(self, **overrides):
+        """The cell's ``repro.api.SolverOptions`` (facade kwargs win)."""
+        from repro.api import SolverOptions
+        kw = dict(tol=self.tol, maxiter=self.maxiter)
+        kw.update(overrides)
+        return SolverOptions(**kw)
+
+    def session(self, *, mesh=None, grid=None, **overrides):
+        """A ready ``SolverSession`` for this cell (defaults to one device's
+        weak-scaling block)."""
+        from repro.api import SolverSession
+        return SolverSession(method=self.method,
+                             grid=tuple(grid or self.local_grid),
+                             stencil=self.stencil, mesh=mesh,
+                             options=self.to_options(**overrides))
 
 
 SOLVER_CONFIGS = {

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core.compat import shard_map
 from repro.core.operators import Stencil
 from repro.core.problems import HPCGProblem
 from repro.core.solvers import SOLVERS, SolveResult
@@ -228,7 +229,7 @@ def solve_shardmap(
         )
 
     spec = layout.spec()
-    fn = jax.shard_map(
+    fn = shard_map(
         local_solve,
         mesh=mesh,
         in_specs=(spec, spec),
@@ -329,7 +330,7 @@ def solve_step_shardmap(
         raise ValueError(f"unknown method {method}")
 
     spec = layout.spec()
-    fn = jax.shard_map(
+    fn = shard_map(
         local_step,
         mesh=mesh,
         in_specs=(spec, spec, spec, spec, spec, P(), P()),

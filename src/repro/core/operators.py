@@ -234,5 +234,10 @@ def touched_elements_per_iter(method: str, nbar: int) -> int:
         "bicgstab_b1": 24 + 2 * nbar,
         "jacobi": 4 + nbar,
         "gauss_seidel": 6 + 2 * nbar,
+        # red-black symmetric GS: 4 coloured half-sweeps + residual, each
+        # half-sweep streams the full offdiag stencil (same accounting as
+        # the relaxed variant; the colouring changes convergence, not the
+        # per-sweep traffic)
+        "gauss_seidel_rb": 6 + 2 * nbar,
     }
     return table[method]

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.operators import Stencil
+from repro.kernels.stencil_spmv import _window_spec
 
 
 def _kernel(stencil: Stencil, nx: int, ny: int, bz: int, colour: int):
@@ -66,9 +67,7 @@ def rb_gs_half_sweep(
         _kernel(stencil, nx, ny, bzz, colour),
         grid=(nz // bzz,),
         in_specs=[
-            pl.BlockSpec(
-                (nx + 2, ny + 2, pl.Element(bzz + 2)), lambda i: (0, 0, i * bzz)
-            ),
+            _window_spec(nx, ny, bzz),
             pl.BlockSpec((nx, ny, bzz), lambda i: (0, 0, i)),
         ],
         out_specs=pl.BlockSpec((nx, ny, bzz), lambda i: (0, 0, i)),

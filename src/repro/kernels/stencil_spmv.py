@@ -29,6 +29,21 @@ from jax.experimental import pallas as pl
 from repro.core.operators import Stencil
 
 
+def _window_spec(nx: int, ny: int, bz: int) -> pl.BlockSpec:
+    """The overlapping (nx+2, ny+2, bz+2) input window, z-indexed by element
+    offset ``i*bz``.  Newer pallas spells the mixed mode per-dim with
+    ``pl.Element``; older pallas only has whole-spec ``Unblocked`` indexing,
+    which is equivalent here because the x/y offsets are always 0."""
+    if hasattr(pl, "Element"):
+        return pl.BlockSpec(
+            (nx + 2, ny + 2, pl.Element(bz + 2)), lambda i: (0, 0, i * bz)
+        )
+    return pl.BlockSpec(
+        (nx + 2, ny + 2, bz + 2), lambda i: (0, 0, i * bz),
+        indexing_mode=pl.Unblocked(),
+    )
+
+
 def _pick_bz(nz: int, requested: int) -> int:
     bz = min(requested, nz)
     while nz % bz:
@@ -98,11 +113,7 @@ def stencil_spmv(
     res = pl.pallas_call(
         _kernel(stencil, nx, ny, bz, fuse_dot),
         grid=(nz // bz,),
-        in_specs=[
-            pl.BlockSpec(
-                (nx + 2, ny + 2, pl.Element(bz + 2)), lambda i: (0, 0, i * bz)
-            )
-        ],
+        in_specs=[_window_spec(nx, ny, bz)],
         out_specs=out_specs,
         out_shape=out_shape,
         interpret=interpret,

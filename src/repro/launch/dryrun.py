@@ -32,6 +32,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.analysis.hlo import collective_bytes, count_collectives, parse_computations
+from repro.core.compat import cost_analysis
 from repro.configs.base import SHAPES, all_configs, get_config
 from repro.distributed.sharding import (
     batch_shardings,
@@ -136,7 +137,7 @@ def _layer_cost(ctx, params_shape, batch, kind: str):
     else:
         fn = jax.jit(group_fwd, in_shardings=(lp_shard, h_shard, pos_shard))
     compiled = fn.lower(layer_shapes, h_shape, pos).compile()
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis(compiled)
     cb = collective_bytes(compiled.as_text())
     return {"flops": float(ca.get("flops", 0.0)),
             "bytes": float(ca.get("bytes accessed", 0.0)),
@@ -198,7 +199,7 @@ def _decode_layer_cost(ctx, params_shape, batch):
     h_shard = NamedSharding(ctx.mesh, P(dp_spec, None, None))
     fn = jax.jit(group, in_shardings=(lp_shard, h_shard, None, cache_shard))
     compiled = fn.lower(layer_shapes, h_shape, pos_shape, cache_shapes).compile()
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis(compiled)
     cb = collective_bytes(compiled.as_text())
     return {"flops": float(ca.get("flops", 0.0)),
             "bytes": float(ca.get("bytes accessed", 0.0)),
@@ -267,7 +268,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
 
     compiled = lowered.compile()
     mem = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis(compiled)
     hlo = compiled.as_text()
     n_coll = count_collectives(hlo)
     cb_raw = collective_bytes(hlo)
@@ -334,16 +335,18 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
 
 def run_solver_cell(method: str, stencil: str, mesh_kind: str, *,
                     local_grid=(128, 128, 128), verbose=True) -> dict:
-    import numpy as np
-    from repro.core.distributed import make_layout, solve_step_shardmap
+    from repro.api import SolverOptions, SolverSession, resolve_backend
     from repro.core.problems import make_problem
 
     mesh = _mesh(mesh_kind)
-    layout_probe = make_layout(mesh)
-    gshape = tuple(local_grid[d] * layout_probe.axis_size(d) for d in range(3))
+    opts = SolverOptions(f64=False)
+    backend = resolve_backend(opts, mesh=mesh)
+    gshape = tuple(local_grid[d] * backend.layout.axis_size(d)
+                   for d in range(3))
     prob = make_problem(gshape, stencil, dtype=jnp.float32)
     t0 = time.time()
-    fn, layout = solve_step_shardmap(prob, method, mesh)
+    sess = SolverSession(prob, method=method, options=opts, backend=backend)
+    fn, layout = sess.step_fn()
     spec = layout.spec()
     sh = NamedSharding(mesh, spec)
     arr = jax.ShapeDtypeStruct(gshape, jnp.float32, sharding=sh)
@@ -351,7 +354,7 @@ def run_solver_cell(method: str, stencil: str, mesh_kind: str, *,
     lowered = jax.jit(fn).lower(arr, arr, arr, arr, arr, scal, scal)
     compiled = lowered.compile()
     mem = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis(compiled)
     hlo = compiled.as_text()
     rec = {
         "method": method, "stencil": stencil, "mesh": mesh_kind,

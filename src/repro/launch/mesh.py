@@ -8,14 +8,15 @@ host platform before calling it.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from repro.core.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_mesh_for_devices(n: int | None = None, *, model: int | None = None) -> Mesh:
@@ -26,11 +27,10 @@ def make_mesh_for_devices(n: int | None = None, *, model: int | None = None) -> 
     """
     n = n or len(jax.devices())
     model = model or next(m for m in (16, 8, 4, 2, 1) if n % m == 0)
-    return jax.make_mesh((n // model, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return make_mesh((n // model, model), ("data", "model"))
 
 
 def make_solver_mesh(n: int | None = None) -> Mesh:
     """1-D mesh for the paper-faithful HPCCG layout (z-only decomposition)."""
     n = n or len(jax.devices())
-    return jax.make_mesh((n,), ("cells",), axis_types=(AxisType.Auto,))
+    return make_mesh((n,), ("cells",))

@@ -1,9 +1,8 @@
 """Distributed solver driver — the paper's workload end-to-end.
 
-Runs any of the seven methods on the HPCG system, decomposed over whatever
-devices exist (paper-faithful 1-D z decomposition on a 1-D mesh, or the
-2-D/3-D production layout), with optional Pallas kernels for the local
-stencil.
+A thin client of ``repro.api``: backend resolution (local / 1-D paper-faithful
+/ 2-D / 3-D shard_map), kernel choice (XLA vs Pallas) and timing all live in
+the facade; this module only parses flags.
 
 PYTHONPATH=src python -m repro.launch.solve --method cg_nb --stencil 27pt \
     --grid 64 64 64
@@ -12,68 +11,70 @@ PYTHONPATH=src python -m repro.launch.solve --method cg_nb --stencil 27pt \
 from __future__ import annotations
 
 import argparse
-import time
 
-import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding
 
+from repro.api import LAYOUTS, SolverOptions, SolverSession, solver_names
 from repro.configs.hpcg import SOLVER_CONFIGS
-from repro.core.distributed import make_layout, solve_shardmap
-from repro.core.problems import enable_f64, make_problem
-from repro.core.solvers import SOLVERS, LocalOp
-from repro.launch.mesh import make_mesh_for_devices, make_solver_mesh
 
 
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--method", default="cg_nb", choices=sorted(SOLVERS))
-    ap.add_argument("--stencil", default="27pt", choices=["7pt", "27pt"])
+    ap.add_argument("--config", default=None, choices=sorted(SOLVER_CONFIGS),
+                    help="named HPCG cell supplying method/stencil/tol/"
+                         "maxiter defaults (explicit flags win)")
+    ap.add_argument("--method", default=None, choices=solver_names())
+    ap.add_argument("--stencil", default=None, choices=["7pt", "27pt"])
     ap.add_argument("--grid", type=int, nargs=3, default=[64, 64, 64])
-    ap.add_argument("--tol", type=float, default=1e-6)
-    ap.add_argument("--maxiter", type=int, default=600)
-    ap.add_argument("--layout", default="1d", choices=["1d", "2d"],
-                    help="1d = paper-faithful z-only decomposition")
-    ap.add_argument("--f64", action="store_true", default=True)
-    ap.add_argument("--pallas", action="store_true",
+    ap.add_argument("--tol", type=float, default=None)
+    ap.add_argument("--maxiter", type=int, default=None)
+    ap.add_argument("--layout", default="auto", choices=list(LAYOUTS),
+                    help="auto = local on 1 device, else the paper-faithful "
+                         "1-D z decomposition")
+    ap.add_argument("--f64", action=argparse.BooleanOptionalAction,
+                    default=True, help="double precision (--no-f64 for f32)")
+    ap.add_argument("--pallas", action=argparse.BooleanOptionalAction,
+                    default=False,
                     help="use the Pallas stencil kernel for the local SpMV")
+    ap.add_argument("--batch", type=int, default=0,
+                    help="also solve N random right-hand sides in one "
+                         "compiled call (the serving path)")
+    ap.add_argument("--repeats", type=int, default=1,
+                    help="timed repetitions after the warm-up/compile call")
     args = ap.parse_args(argv)
 
-    if args.f64:
-        enable_f64()
-    prob = make_problem(tuple(args.grid), args.stencil)
-    matvec_padded = None
-    if args.pallas:
-        from repro.kernels import ops
-        matvec_padded = ops.make_matvec_padded(prob.stencil)
+    cfg = SOLVER_CONFIGS[args.config] if args.config else None
+    method = args.method or (cfg.method if cfg else "cg_nb")
+    stencil = args.stencil or (cfg.stencil if cfg else "27pt")
+    overrides = dict(f64=args.f64, layout=args.layout, pallas=args.pallas)
+    if args.tol is not None:
+        overrides["tol"] = args.tol
+    if args.maxiter is not None:
+        overrides["maxiter"] = args.maxiter
+    opts = (cfg.to_options(**overrides) if cfg
+            else SolverOptions(**overrides))
+    sess = SolverSession(method=method, grid=tuple(args.grid),
+                         stencil=stencil, options=opts)
+    res, stats = sess.timed_solve(repeats=args.repeats, warmup=1)
+    dt = stats["median"]
 
-    n = len(jax.devices())
-    if n == 1:
-        A = LocalOp(prob.stencil, matvec_padded=matvec_padded)
-        t0 = time.time()
-        res = jax.jit(
-            lambda b, x0: SOLVERS[args.method](
-                A, b, x0, tol=args.tol, maxiter=args.maxiter, norm_ref=1.0)
-        )(prob.b(), prob.x0())
-        dt = time.time() - t0
-    else:
-        mesh = make_solver_mesh(n) if args.layout == "1d" else make_mesh_for_devices(n)
-        fn, layout = solve_shardmap(
-            prob, args.method, mesh, tol=args.tol, maxiter=args.maxiter,
-            matvec_padded=matvec_padded)
-        sh = NamedSharding(mesh, layout.spec())
-        b = jax.device_put(prob.b(), sh)
-        x0 = jax.device_put(prob.x0(), sh)
-        t0 = time.time()
-        res = jax.jit(fn)(b, x0)
-        dt = time.time() - t0
-
-    err = float(jnp.max(jnp.abs(res.x - prob.x_true())))
-    print(f"[solve] {args.method}/{args.stencil} grid={tuple(args.grid)} "
+    err = float(jnp.max(jnp.abs(res.x - sess.problem.x_true())))
+    print(f"[solve] {method}/{stencil} grid={tuple(args.grid)} "
           f"iters={int(res.iters)} res={float(res.res_norm):.3e} "
-          f"err_inf={err:.3e} wall={dt:.2f}s devices={n}")
-    return {"iters": int(res.iters), "res_norm": float(res.res_norm),
-            "err": err, "wall_s": dt}
+          f"err_inf={err:.3e} wall={dt:.2f}s backend={sess.backend.describe()}")
+    out = {"iters": int(res.iters), "res_norm": float(res.res_norm),
+           "err": err, "wall_s": dt, "backend": sess.backend.describe()}
+
+    if args.batch:
+        import numpy as np
+        rng = np.random.default_rng(0)
+        bs = jnp.asarray(rng.standard_normal((args.batch, *args.grid)),
+                         dtype=res.x.dtype)
+        bres, bstats = sess.timed_solve_batched(bs, repeats=args.repeats)
+        print(f"[solve] batched x{args.batch}: iters="
+              f"{np.asarray(bres.iters).tolist()} wall={bstats['median']:.2f}s")
+        out["batch_wall_s"] = bstats["median"]
+    return out
 
 
 if __name__ == "__main__":

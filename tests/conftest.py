@@ -8,13 +8,14 @@ import pytest
 
 @pytest.fixture(scope="session")
 def f64():
+    prev = jax.config.jax_enable_x64
     jax.config.update("jax_enable_x64", True)
     yield
-    jax.config.update("jax_enable_x64", False)
+    jax.config.update("jax_enable_x64", prev)
 
 
 @pytest.fixture(scope="session")
 def mesh1():
     """Trivial 1-device mesh with production axis names."""
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.core.compat import make_mesh
+    return make_mesh((1, 1), ("data", "model"))

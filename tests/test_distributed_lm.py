@@ -30,10 +30,9 @@ from repro.distributed.sharding import (batch_shardings, param_shardings,
 from repro.optim.adamw import adamw
 from repro.optim.schedules import constant
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
-mesh1 = jax.make_mesh((1, 1), ("data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.core.compat import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
+mesh1 = make_mesh((1, 1), ("data", "model"))
 out = {}
 for arch in ("internlm2-1.8b", "qwen3-moe-235b-a22b", "minicpm-2b"):
     cfg = get_config(arch).reduced()

@@ -21,9 +21,10 @@ def tols(dt):
 
 @pytest.fixture(scope="module", autouse=True)
 def _f64():
+    prev = jax.config.jax_enable_x64
     jax.config.update("jax_enable_x64", True)
     yield
-    jax.config.update("jax_enable_x64", False)
+    jax.config.update("jax_enable_x64", prev)   # don't clobber session state
 
 
 @pytest.mark.parametrize("stencil", STENCILS, ids=lambda s: s.name)

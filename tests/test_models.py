@@ -22,8 +22,8 @@ ARCHS = sorted(all_configs())
 
 @pytest.fixture(scope="module")
 def mesh1():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.core.compat import make_mesh
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def _ctx(cfg, mesh):
