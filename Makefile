@@ -5,10 +5,17 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test smoke bench examples
+.PHONY: test test-fast verify smoke bench examples
 
 test:
 	$(PYTHON) -m pytest -x -q
+
+# the tier-1 gate, exactly as ROADMAP.md specifies it (== make test)
+verify: test
+
+# quick loop: drop the multi-minute subprocess sweeps (marked `slow`)
+test-fast:
+	$(PYTHON) -m pytest -x -q -m "not slow"
 
 smoke:
 	$(PYTHON) -m repro.launch.solve --maxiter 5 --grid 16 16 16

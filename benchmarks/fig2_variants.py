@@ -22,6 +22,7 @@ import sys
 
 from benchmarks.common import csv
 from repro.api import SolverOptions, SolverSession, variant_pairs
+from repro.core.problems import enable_f64
 
 # The "algo" (fusion-disabled) view needs --xla_disable_hlo_passes, which
 # this jaxlib cannot take per-compile (repeated proto field); the parent runs
@@ -81,6 +82,7 @@ def _run_trace(view: str) -> dict | None:
 
 
 def main() -> None:
+    enable_f64()      # paper precision; owned by the driver, not the facade
     n = 64
     krylov_pairs = [(base, var) for base, var in variant_pairs()
                     if base in ("cg", "bicgstab")]

@@ -31,10 +31,12 @@ def main() -> None:
                         (pair[1], "dataflow")]
                 ts = {}
                 for method, ex in runs:
+                    halo = "overlap" if ex == "dataflow" else "concat"
                     effs = []
                     for n in CHIPS:
                         t = iteration_time(method, nbar, (128, 128, 128), n,
-                                           noise=noise, execution=ex)
+                                           noise=noise, execution=ex,
+                                           halo_mode=halo)
                         effs.append(round(t_ref / t, 4))
                         ts[(method, ex, n)] = t
                     csv(f"fig3_{noise}_{stencil}_{method}_{ex}", 0.0,

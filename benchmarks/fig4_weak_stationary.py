@@ -12,11 +12,13 @@ from __future__ import annotations
 from benchmarks.common import csv
 from benchmarks.scaling_model import iteration_time
 from repro.api import SolverOptions, SolverSession
+from repro.core.problems import enable_f64
 
 CHIPS = (1, 8, 64, 256, 512, 1024, 4096)
 
 
 def main() -> None:
+    enable_f64()      # paper precision; owned by the driver, not the facade
     for noise in ("tpu", "noisy"):
         for stencil, nbar in (("7pt", 7), ("27pt", 27)):
             for method, ex in (("jacobi", "mpi"), ("jacobi", "dataflow"),
@@ -24,9 +26,10 @@ def main() -> None:
                                ("gauss_seidel", "dataflow")):
                 t_ref = iteration_time(method, nbar, (128, 128, 128), 1,
                                        noise=noise, execution="mpi")
+                halo = "overlap" if ex == "dataflow" else "concat"
                 effs = [round(t_ref / iteration_time(
                     method, nbar, (128, 128, 128), n, noise=noise,
-                    execution=ex), 4) for n in CHIPS]
+                    execution=ex, halo_mode=halo), 4) for n in CHIPS]
                 csv(f"fig4_{noise}_{stencil}_{method}_{ex}", 0.0,
                     "eff@" + "/".join(map(str, CHIPS)) + "="
                     + "/".join(map(str, effs)))

@@ -23,15 +23,17 @@ def main() -> None:
     for noise in ("tpu", "noisy"):
         for stencil, nbar in (("7pt", 7), ("27pt", 27)):
             for method in methods:
-                effs = [round(strong_efficiency(method, nbar, n, noise=noise),
-                              4) for n in CHIPS]
+                effs = [round(strong_efficiency(method, nbar, n, noise=noise,
+                                                halo_mode="overlap"), 4)
+                        for n in CHIPS]
                 csv(f"fig56_{noise}_{stencil}_{method}", 0.0,
                     "eff@" + "/".join(map(str, CHIPS)) + "="
                     + "/".join(map(str, effs)))
             # crossover: first n losing >half the single-chip efficiency
             for method in ("cg", "cg_nb"):
                 cross = next((n for n in CHIPS if strong_efficiency(
-                    method, nbar, n, noise=noise) < 0.5), None)
+                    method, nbar, n, noise=noise,
+                    halo_mode="overlap") < 0.5), None)
                 csv(f"fig56_{noise}_{stencil}_{method}_half_eff_at", 0.0,
                     str(cross))
 

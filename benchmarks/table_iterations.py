@@ -14,6 +14,7 @@ import os
 
 from benchmarks.common import csv
 from repro.api import SolverOptions, SolverSession
+from repro.core.problems import enable_f64
 
 PAPER = {
     ("7pt", "bicgstab"): 8, ("7pt", "cg"): 12,
@@ -24,6 +25,7 @@ PAPER = {
 
 
 def main() -> None:
+    enable_f64()      # paper precision; owned by the driver, not the facade
     n = 128 if os.environ.get("BENCH_FULL") else 64
     opts = SolverOptions(tol=1e-6, maxiter=700, layout="local")
     for stencil in ("7pt", "27pt"):

@@ -11,6 +11,9 @@ PYTHONPATH=src python examples/quickstart.py
 
 from repro.api import REGISTRY, SolverOptions, solve, solver_names
 from repro.core.operators import touched_elements_per_iter
+from repro.core.problems import enable_f64
+
+enable_f64()      # paper precision; the facade no longer flips x64 itself
 
 opts = SolverOptions(tol=1e-6, maxiter=700)
 

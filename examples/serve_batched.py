@@ -20,6 +20,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.api import SolverOptions, SolverSession
+from repro.core.problems import enable_f64
+
+enable_f64()      # paper precision; the facade no longer flips x64 itself
 
 BATCH = 8
 GRID = (32, 32, 32)

@@ -20,6 +20,9 @@ import sys
 sys.path.insert(0, "src")
 import jax.numpy as jnp
 from repro.api import SolverOptions, solve
+from repro.core.problems import enable_f64
+
+enable_f64()      # paper precision; the facade no longer flips x64 itself
 
 opts = SolverOptions(tol=1e-6, maxiter=300)
 kw = dict(method="cg_nb", grid=(32, 32, 64), stencil="27pt", options=opts)

@@ -184,10 +184,15 @@ _TRIVIAL_OPS = {
 }
 
 
-def overlap_slack(hlo_text: str, computation_filter: str | None = None):
+def overlap_slack(hlo_text: str, computation_filter: str | None = None,
+                  ops: tuple[str, ...] | None = None):
     """For each collective: how much work is *hideable behind it* — ops that
     are neither ancestors (already done when the collective issues) nor
     descendants (waiting on it) in the dependence graph.
+
+    ``ops`` restricts the report to the named collective base opcodes (e.g.
+    ``("collective-permute",)`` for the halo traffic, ``("all-reduce",)`` for
+    the global reductions); default is every collective.
 
     Work proxy: result bytes of non-trivial ops (solver bodies are
     elementwise/stencil-dominated so byte traffic tracks FLOPs).  Reported
@@ -219,6 +224,8 @@ def overlap_slack(hlo_text: str, computation_filter: str | None = None):
         total_w = weights.sum() or 1.0
         for i, ins in enumerate(comp.instructions):
             if not is_collective(ins.opcode) or ins.opcode.endswith("-done"):
+                continue
+            if ops is not None and ins.opcode.replace("-start", "") not in ops:
                 continue
             dependent = _reachable(fwd, i) | _reachable(bwd, i)
             indep_w = total_w - weights[list(dependent)].sum()

@@ -1,7 +1,8 @@
 # Unified solver facade (docs/API.md): one entry point for local, sharded
 # and Pallas-backed solves, with batched multi-RHS support for serving.
-from repro.api.backend import Backend, resolve_backend, resolve_matvec
-from repro.api.options import LAYOUTS, SolverOptions
+from repro.api.backend import (Backend, resolve_backend, resolve_halo_mode,
+                               resolve_matvec)
+from repro.api.options import HALO_MODES, LAYOUTS, SolverOptions
 from repro.api.registry import (
     REGISTRY,
     SolverSpec,
@@ -15,6 +16,7 @@ from repro.api.timing import timed, timed_result
 
 __all__ = [
     "Backend",
+    "HALO_MODES",
     "LAYOUTS",
     "REGISTRY",
     "SolverOptions",
@@ -23,6 +25,7 @@ __all__ = [
     "get_solver",
     "register_solver",
     "resolve_backend",
+    "resolve_halo_mode",
     "resolve_matvec",
     "solve",
     "solve_batched",

@@ -101,3 +101,20 @@ def resolve_matvec(stencil: Stencil,
         from repro.kernels import ops
         return ops.make_matvec_padded(stencil)
     return None
+
+
+def resolve_halo_mode(options: SolverOptions) -> str:
+    """Resolve ``halo_mode="auto"`` for the distributed operator.
+
+    ``"overlap"`` (interior/shell split, ppermutes hidden behind interior
+    compute) is the default for the built-in stencil formulations — it is
+    bit-for-bit identical to ``"concat"`` and strictly better on the
+    schedule.  A user-supplied ``matvec_padded`` or the Pallas kernel may be
+    tile-shape-specialised, so the slab-shaped shell applies fall back to
+    the monolithic ``"concat"`` exchange there.
+    """
+    if options.halo_mode != "auto":
+        return options.halo_mode
+    if options.matvec_padded is not None or options.pallas:
+        return "concat"
+    return "overlap"

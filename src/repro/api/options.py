@@ -11,6 +11,9 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable
 
+#: accepted ``halo_mode`` values, owned by the operator that implements them
+#: (see backend.resolve_halo_mode for how "auto" resolves)
+from repro.core.distributed import HALO_MODES
 
 #: accepted ``layout`` values and what they resolve to (see backend.py)
 LAYOUTS = ("auto", "local", "1d", "2d", "3d")
@@ -24,14 +27,13 @@ class SolverOptions:
     ----------
     tol:          convergence tolerance (relative to ``norm_ref``).
     maxiter:      iteration cap.
-    f64:          build facade-constructed problems in double precision (the
-                  paper's setting).  Only consulted when the facade builds
-                  the problem from ``grid``/``stencil``: it then calls
-                  ``enable_f64()``, which flips the PROCESS-GLOBAL
-                  ``jax_enable_x64`` flag (a JAX limitation — x64 is not a
-                  per-computation switch).  A problem you pass in is
-                  authoritative: its dtype is used as-is and no global
-                  state is touched.
+    f64:          solve in double precision (the paper's setting).  The
+                  facade never flips the process-global ``jax_enable_x64``
+                  flag itself: building an f64 problem requires the caller
+                  to have run ``repro.core.problems.enable_f64()`` at
+                  process start (drivers do), and a pre-built ``problem``
+                  whose dtype contradicts this flag raises instead of being
+                  silently accepted.
     layout:       device decomposition: ``"auto"`` (local on 1 device, else
                   the paper-faithful 1-D z split), ``"local"``, ``"1d"``,
                   ``"2d"`` (data×model mesh), ``"3d"`` (pod×data×model).
@@ -41,7 +43,15 @@ class SolverOptions:
     dot:          override the reduction used by the solver (local path
                   only; the distributed path always uses the layout's psum).
     halo_mode:    halo-exchange strategy for the distributed operator
-                  (``"auto"`` | ``"concat"`` | ``"scatter"``).
+                  (``"auto"`` | ``"concat"`` | ``"scatter"`` |
+                  ``"overlap"``).  ``"overlap"`` splits the SpMV into an
+                  interior part computed while the ppermutes are in flight
+                  and a boundary shell finished from the received planes;
+                  all modes produce bit-for-bit identical results.
+                  ``"auto"`` resolves to ``"overlap"`` for the built-in
+                  stencil formulations, ``"concat"`` under a custom
+                  ``matvec_padded``/Pallas kernel (see
+                  ``backend.resolve_halo_mode``).
     matvec_padded: override the padded-operand SpMV (wins over ``pallas``).
     dims_map:     explicit grid-dim -> mesh-axis mapping (advanced; wins
                   over ``layout`` when a mesh is supplied).
@@ -62,6 +72,9 @@ class SolverOptions:
         if self.layout not in LAYOUTS:
             raise ValueError(
                 f"unknown layout {self.layout!r}; options: {LAYOUTS}")
+        if self.halo_mode not in HALO_MODES:
+            raise ValueError(
+                f"unknown halo_mode {self.halo_mode!r}; options: {HALO_MODES}")
         if self.maxiter < 0:
             raise ValueError(f"maxiter must be >= 0, got {self.maxiter}")
 

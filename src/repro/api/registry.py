@@ -22,6 +22,12 @@ from repro.core import solvers as _solvers
 #: "spmv" = overlapped with the SpMV.
 HideKind = str
 
+#: how a SpMV's halo exchange hides (one entry per SpMV per iteration):
+#: "interior" = the ppermutes ride behind the interior stencil apply
+#: (halo_mode="overlap"), "none" = the consumer needs the halos immediately
+#: (the Gauss-Seidel sweeps: the very first plane/colour reads them).
+HaloHideKind = str
+
 
 @dataclasses.dataclass(frozen=True)
 class SolverSpec:
@@ -31,10 +37,20 @@ class SolverSpec:
     fn: Callable                      # (A, b, x0, *, tol, maxiter, dot, norm_ref)
     reduction_hides: tuple[HideKind, ...]
     spmvs_per_iter: int
+    halo_hides: tuple[HaloHideKind, ...] = ()   # defaults to all-"interior"
     variant_of: str | None = None     # classical baseline this method refines
     spd_required: bool = False
     stationary: bool = False          # Jacobi/GS family (vs Krylov)
     description: str = ""
+
+    def __post_init__(self):
+        if not self.halo_hides:
+            object.__setattr__(
+                self, "halo_hides", ("interior",) * self.spmvs_per_iter)
+        if len(self.halo_hides) != self.spmvs_per_iter:
+            raise ValueError(
+                f"{self.name!r}: halo_hides needs one entry per SpMV "
+                f"({len(self.halo_hides)} != {self.spmvs_per_iter})")
 
     @property
     def reductions_per_iter(self) -> int:
@@ -44,6 +60,11 @@ class SolverSpec:
     def blocking_reductions(self) -> int:
         """Reductions with no overlap window (the paper's hard barriers)."""
         return sum(1 for h in self.reduction_hides if h == "none")
+
+    @property
+    def hidden_halos(self) -> int:
+        """SpMVs whose halo exchange overlaps interior compute."""
+        return sum(1 for h in self.halo_hides if h == "interior")
 
 
 REGISTRY: dict[str, SolverSpec] = {}
@@ -81,6 +102,8 @@ def variant_pairs() -> list[tuple[str, str]]:
 # --- the seven methods of the paper ------------------------------------------
 # Reduction structure per §3.1/Fig. 1; SpMV counts per the touched-elements
 # model.  Stationary methods report one residual-norm reduction per sweep.
+# halo_hides: Krylov/Jacobi SpMVs split interior/shell (halo_mode="overlap"),
+# the GS sweeps consume their halos at the first plane/colour -> "none".
 
 register_solver(SolverSpec(
     name="jacobi", fn=_solvers.jacobi,
@@ -90,11 +113,13 @@ register_solver(SolverSpec(
 register_solver(SolverSpec(
     name="gauss_seidel_rb", fn=_solvers.sym_gauss_seidel_rb,
     reduction_hides=("none",), spmvs_per_iter=2, stationary=True,
+    halo_hides=("none", "none"),
     description="red-black coloured symmetric Gauss-Seidel (§3.4)"))
 
 register_solver(SolverSpec(
     name="gauss_seidel", fn=_solvers.sym_gauss_seidel_relaxed,
     reduction_hides=("none",), spmvs_per_iter=2, stationary=True,
+    halo_hides=("none", "none"),
     variant_of="gauss_seidel_rb",
     description="relaxed tasked symmetric GS (§3.4 Code 4, TPU adaptation)"))
 

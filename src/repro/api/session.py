@@ -29,13 +29,14 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.api.backend import Backend, resolve_backend, resolve_matvec
+from repro.api.backend import (Backend, resolve_backend, resolve_halo_mode,
+                               resolve_matvec)
 from repro.api.options import SolverOptions
 from repro.api.registry import SolverSpec, get_solver
 from repro.api.timing import timed_result
 from repro.core.compat import shard_map
 from repro.core.distributed import DistributedOp, solve_shardmap, solve_step_shardmap
-from repro.core.problems import HPCGProblem, enable_f64, make_problem
+from repro.core.problems import HPCGProblem, make_problem
 from repro.core.solvers import LocalOp, SolveResult
 
 
@@ -57,17 +58,31 @@ class SolverSession:
         if problem is None:
             if grid is None:
                 raise ValueError("need either a problem or a grid")
-            if self.options.f64:
-                enable_f64()
-                dtype = None
-            else:
-                dtype = jnp.float32
+            if self.options.f64 and not jax.config.jax_enable_x64:
+                raise ValueError(
+                    "SolverOptions.f64=True but jax x64 is disabled.  The "
+                    "facade no longer flips the process-global "
+                    "jax_enable_x64 flag implicitly: call "
+                    "repro.core.problems.enable_f64() at process start "
+                    "(x64 is not a per-computation switch in JAX) or pass "
+                    "SolverOptions(f64=False).")
+            dtype = jnp.float64 if self.options.f64 else jnp.float32
             problem = make_problem(tuple(grid), stencil, dtype=dtype)
+        else:
+            want = jnp.float64 if self.options.f64 else jnp.float32
+            have = jnp.dtype(problem.dtype)
+            if have != jnp.dtype(want):
+                raise ValueError(
+                    f"SolverOptions.f64={self.options.f64} conflicts with the "
+                    f"pre-built problem's dtype {have.name}; pass "
+                    f"f64={have == jnp.dtype(jnp.float64)} (the problem's "
+                    f"dtype is authoritative) or rebuild the problem.")
         self.problem = problem
         self.spec: SolverSpec = get_solver(method)
         self.backend: Backend = backend or resolve_backend(self.options,
                                                            mesh=mesh)
         self._matvec = resolve_matvec(problem.stencil, self.options)
+        self.halo_mode = resolve_halo_mode(self.options)
         self._fn = None          # compiled single-RHS solve
         self._batched_fn = None  # compiled multi-RHS solve
 
@@ -100,7 +115,7 @@ class SolverSession:
             self.problem, self.method, self.backend.mesh,
             dims_map=opts.dims_map, tol=opts.tol, maxiter=opts.maxiter,
             norm_ref=opts.norm_ref, matvec_padded=self._matvec,
-            halo_mode=opts.halo_mode)
+            halo_mode=self.halo_mode)
         return jax.jit(fn)
 
     def _place(self, x: jax.Array, *, batched: bool = False) -> jax.Array:
@@ -149,7 +164,7 @@ class SolverSession:
 
         def local_solve(b_loc, x0_loc):
             op = DistributedOp(stencil, layout, matvec_padded=self._matvec,
-                               halo_mode=opts.halo_mode)
+                               halo_mode=self.halo_mode)
             return self.spec.fn(op, b_loc, x0_loc, dot=op.dot,
                                 **opts.solver_kwargs())
 
@@ -204,7 +219,7 @@ class SolverSession:
         return solve_step_shardmap(
             self.problem, self.method, self.backend.mesh,
             dims_map=self.options.dims_map, matvec_padded=self._matvec,
-            halo_mode=self.options.halo_mode)
+            halo_mode=self.halo_mode)
 
 
 # -- one-shot facades ---------------------------------------------------------

@@ -136,6 +136,67 @@ class Stencil:
         return acc
 
 
+# -----------------------------------------------------------------------------
+# Interior/boundary-shell split (the overlapped halo-exchange SpMV)
+# -----------------------------------------------------------------------------
+# The split is the task-based stencil decomposition of the paper's
+# exchange_externals + SpMV: output cells at distance >= 1 from every
+# decomposed face read no exchanged halo, so they can be computed while the
+# ppermutes are in flight; only the one-cell-thick boundary shell waits for
+# the received planes.  Both functions delegate the actual apply to a
+# ``matvec_padded`` callable, so the slice-add, conv and Pallas formulations
+# all split the same way.  Each output element's arithmetic is
+# position-independent, so the split reproduces the monolithic apply exactly
+# up to the compiler's per-shape FMA contraction choices; in the solver
+# programs the results are bit-for-bit identical across halo modes
+# (asserted by tests/test_halo_overlap.py on 7pt/27pt × 1-D/3-D layouts).
+
+def interior_matvec(mv_padded, x: jax.Array,
+                    split_dims: Sequence[int]) -> jax.Array:
+    """Apply the stencil to the halo-independent interior of a local block.
+
+    ``x`` is the UNPADDED local block.  Along each dim in ``split_dims`` the
+    block itself provides the one-cell support of its interior (output extent
+    ``n-2``); unsplit dims get the usual zero halo (physical boundary).
+    """
+    pad = [(0, 0) if d in split_dims else (1, 1) for d in range(3)]
+    return mv_padded(jnp.pad(x, pad))
+
+
+def shell_assemble(mv_padded, xp: jax.Array, y_interior: jax.Array,
+                   split_dims: Sequence[int]) -> jax.Array:
+    """Finish the split apply: boundary-shell slabs from the exchanged
+    padded array ``xp``, concatenated around ``y_interior``.
+
+    Slabs are computed per split dim (outermost last) over the still-interior
+    extent of the dims assembled before them, so edge/corner cells are
+    produced exactly once per assembly step from the same ``xp`` values the
+    monolithic apply reads.
+    """
+    y = y_interior
+    done: set[int] = set()
+    for d in sorted(split_dims, reverse=True):
+        def slab(lo: bool) -> jax.Array:
+            starts, limits = [], []
+            for e in range(3):
+                pe = xp.shape[e]
+                if e == d:                     # 3 planes -> 1 output plane
+                    s = 0 if lo else pe - 3
+                    starts.append(s)
+                    limits.append(s + 3)
+                elif e in split_dims and e not in done:
+                    starts.append(1)           # dim still at interior extent
+                    limits.append(pe - 1)
+                else:
+                    starts.append(0)           # assembled/unsplit: full extent
+                    limits.append(pe)
+            return mv_padded(jax.lax.slice(xp, starts, limits))
+
+        y = jnp.concatenate([slab(True), y, slab(False)], axis=d)
+        done.add(d)
+    return y
+
+
 # HPCCG's generator (the paper's host code) puts 27.0 on the diagonal and -1
 # on every neighbour, for BOTH sparsity levels.  This makes the 7-pt matrix
 # strongly diagonally dominant (27 vs 6), which is what yields the paper's

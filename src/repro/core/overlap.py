@@ -28,6 +28,8 @@ __all__ = [
     "overlap_slack",
     "iteration_overlap_report",
     "blocking_reductions",
+    "halo_slack",
+    "blocking_halos",
 ]
 
 
@@ -53,3 +55,25 @@ def blocking_reductions(report: list[dict], vector_bytes: float) -> int:
         for r in report
         if r["op"].startswith("all-reduce") and r["slack_bytes"] < vector_bytes
     )
+
+
+def halo_slack(report: list[dict]) -> list[dict]:
+    """The ``collective-permute`` (halo-exchange) entries of a slack report.
+
+    The halo-side counterpart of the all-reduce barrier accounting: under
+    ``halo_mode="overlap"`` each ppermute should show an interior-SpMV's
+    worth of hideable work; under the monolithic ``"concat"``/``"scatter"``
+    exchanges the whole SpMV (and everything after it) depends on the
+    received planes, so slack collapses to at most the opposite-direction
+    plane's traffic.
+    """
+    return [r for r in report if r["op"].startswith("collective-permute")]
+
+
+def blocking_halos(report: list[dict], plane_bytes: float) -> int:
+    """Halo exchanges with less hideable work than one boundary plane —
+    ppermutes the schedule cannot hide behind interior compute (the
+    fork-join pattern the paper's Fig. 1 shows losing, applied to the
+    point-to-point traffic instead of the global reductions)."""
+    return sum(1 for r in halo_slack(report)
+               if r["slack_bytes"] < plane_bytes)

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.api import LAYOUTS, SolverOptions, SolverSession, solver_names
 from repro.configs.hpcg import SOLVER_CONFIGS
+from repro.core.problems import enable_f64
 
 
 def main(argv=None) -> dict:
@@ -46,6 +47,10 @@ def main(argv=None) -> dict:
     cfg = SOLVER_CONFIGS[args.config] if args.config else None
     method = args.method or (cfg.method if cfg else "cg_nb")
     stencil = args.stencil or (cfg.stencil if cfg else "27pt")
+    if args.f64:
+        # process-global x64 is owned HERE, at the CLI entry point — the
+        # facade refuses to flip it implicitly (see SolverOptions.f64)
+        enable_f64()
     overrides = dict(f64=args.f64, layout=args.layout, pallas=args.pallas)
     if args.tol is not None:
         overrides["tol"] = args.tol

@@ -105,20 +105,34 @@ def moe_forward(p, cfg: ArchConfig, x, mesh: Mesh, dp_axes: tuple[str, ...],
             hs = xt @ sh_in
             out = out + (_act(cfg.act)(hs[:, :f_loc]) * hs[:, f_loc:]) @ sh_out
         out = lax.psum(out, tp_axis)
-        me = jnp.mean(probs, axis=0)
-        ce = jnp.zeros((E,), jnp.float32).at[flat_e].add(1.0) / (T * k_top)
-        aux = lax.pmean(E * jnp.sum(me * ce), dp_axes)
+        me = lax.pmean(jnp.mean(probs, axis=0), dp_axes)
+        ce = lax.pmean(
+            jnp.zeros((E,), jnp.float32).at[flat_e].add(1.0) / (T * k_top),
+            dp_axes)
+        aux = E * jnp.sum(me * ce)
         return out.reshape(B, S, d).astype(x_loc.dtype), aux
+
+    dp_total = 1
+    for a in dp_axes:
+        dp_total *= mesh.shape[a]
 
     def local_fn(router_w, w_in, w_out, shared, x_loc):
         B, S, _ = x_loc.shape
         T = B * S
         # gather wins ONLY when a shard sees fewer assignments than it owns
         # experts (measured: at decode_32k's B_loc·k ≈ E/tp the two paths
-        # read the same weight bytes — EXPERIMENTS.md §Perf-3c, refuted)
-        if T * k_top <= min(GATHER_MAX_ASSIGNMENTS, E // tp - 1):
+        # read the same weight bytes — EXPERIMENTS.md §Perf-3c, refuted).
+        # Decided on the GLOBAL count: the paths differ in drop semantics
+        # (gather never drops), so dp layouts must not flip the choice.
+        if T * dp_total * k_top <= min(GATHER_MAX_ASSIGNMENTS, E // tp - 1):
             return gather_fn(router_w, w_in, w_out, shared, x_loc)
-        C = capacity(T, cfg)
+        # capacity and drop decisions must be dp-invariant: C from the GLOBAL
+        # token count, ranks offset by earlier dp shards' per-expert loads —
+        # otherwise distributed and single-device runs drop DIFFERENT
+        # token-expert assignments and the losses diverge (the old per-shard
+        # capacity(T_local) was off by the dp rounding AND re-ranked each
+        # shard's tokens from zero).
+        C = capacity(T * dp_total, cfg)
         xt = x_loc.reshape(T, d)
         # --- routing (replicated over tp; independent of expert weights) ----
         logits = (xt.astype(jnp.float32) @ router_w)
@@ -131,25 +145,44 @@ def moe_forward(p, cfg: ArchConfig, x, mesh: Mesh, dp_axes: tuple[str, ...],
         st = (jnp.arange(T * k_top) // k_top)[order]
         sw = w.reshape(-1)[order]
         starts = jnp.searchsorted(se, jnp.arange(E))
-        rank = jnp.arange(T * k_top) - starts[se]
+        rank = jnp.arange(T * k_top) - starts[se]           # local stable rank
+        rank_g = rank
+        if dp_total > 1:
+            # global rank = local rank + assignments to the same expert on
+            # dp shards owning EARLIER tokens (batch is laid out row-major
+            # over dp_axes, matching all_gather's tuple order)
+            counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+            all_counts = lax.all_gather(counts, dp_axes, axis=0)  # (dp, E)
+            lin = jnp.int32(0)
+            for a in dp_axes:
+                lin = lin * mesh.shape[a] + lax.axis_index(a)
+            before = jnp.arange(dp_total, dtype=jnp.int32) < lin
+            offset = jnp.sum(jnp.where(before[:, None], all_counts, 0), axis=0)
+            rank_g = rank + offset[se]
         # --- my experts ------------------------------------------------------
         shard = lax.axis_index(tp_axis)
         le = se - shard * E_local
-        valid = (le >= 0) & (le < E_local) & (rank < C)
-        slot = jnp.where(valid, le * C + rank, E_local * C)  # OOB -> dropped
-        table = jnp.full((E_local * C,), T, jnp.int32).at[slot].set(
+        # drop on the GLOBAL rank (same set as a single-device run); slots
+        # index by the LOCAL rank, so the dispatch buffers stay sized by
+        # what this shard can actually fill (rank < min(C, T·k) always,
+        # since rank <= rank_g < C and a shard has T·k assignments) — NOT
+        # by the dp-independent global capacity
+        Cs = min(C, T * k_top)
+        valid = (le >= 0) & (le < E_local) & (rank_g < C)
+        slot = jnp.where(valid, le * Cs + rank, E_local * Cs)  # OOB -> dropped
+        table = jnp.full((E_local * Cs,), T, jnp.int32).at[slot].set(
             st.astype(jnp.int32), mode="drop")
-        wtab = jnp.zeros((E_local * C,), jnp.float32).at[slot].set(
+        wtab = jnp.zeros((E_local * Cs,), jnp.float32).at[slot].set(
             sw, mode="drop")
         x_pad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)])
-        xg = x_pad[table].reshape(E_local, C, d)
+        xg = x_pad[table].reshape(E_local, Cs, d)
         h = jnp.einsum("ecd,edf->ecf", xg, w_in)
         gate, up = h[..., :f], h[..., f:]
         h = _act(cfg.act)(gate) * up
         y = jnp.einsum("ecf,efd->ecd", h, w_out)
-        y = y * wtab.reshape(E_local, C, 1).astype(y.dtype)
+        y = y * wtab.reshape(E_local, Cs, 1).astype(y.dtype)
         y_flat = jnp.zeros((T + 1, d), y.dtype).at[table].add(
-            y.reshape(E_local * C, d))
+            y.reshape(E_local * Cs, d))
         out = y_flat[:T]
         # --- shared expert: plain tensor-parallel MLP partial ----------------
         if cfg.shared_expert:
@@ -159,10 +192,14 @@ def moe_forward(p, cfg: ArchConfig, x, mesh: Mesh, dp_axes: tuple[str, ...],
             out = out + (_act(cfg.act)(hs[:, :f_loc]) * hs[:, f_loc:]) @ sh_out
         out = lax.psum(out, tp_axis)                         # ONE collective
         # --- load-balance aux (Switch-style), replicated ---------------------
-        me = jnp.mean(probs, axis=0)                         # (E,)
-        ce = jnp.zeros((E,), jnp.float32).at[flat_e].add(1.0) / (T * k_top)
+        # pmean the per-expert vectors BEFORE the bilinear product: the aux
+        # is E·Σ_e me_e·ce_e over the GLOBAL batch; averaging per-shard
+        # products instead is a different (dp-dependent) number
+        me = lax.pmean(jnp.mean(probs, axis=0), dp_axes)     # (E,)
+        ce = lax.pmean(
+            jnp.zeros((E,), jnp.float32).at[flat_e].add(1.0) / (T * k_top),
+            dp_axes)
         aux = E * jnp.sum(me * ce)
-        aux = lax.pmean(aux, dp_axes)
         return out.reshape(B, S, d).astype(x_loc.dtype), aux
 
     dp = P(dp_axes if len(dp_axes) > 1 else dp_axes[0])

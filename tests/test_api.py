@@ -140,6 +140,45 @@ def test_unknown_method_raises(problem):
         solve(problem, method="sor")
 
 
+def test_f64_mismatch_with_prebuilt_problem_raises(problem):
+    """An f64 problem + f64=False (or the converse) is a configuration
+    error, not something to silently ignore."""
+    with pytest.raises(ValueError, match="conflicts"):
+        SolverSession(problem, method="cg",
+                      options=SolverOptions(f64=False))
+    f32_prob = make_problem(SHAPE, "27pt", dtype=jnp.float32)
+    with pytest.raises(ValueError, match="conflicts"):
+        SolverSession(f32_prob, method="cg")          # default f64=True
+
+
+def test_facade_never_flips_global_x64():
+    """Building an f64 problem without x64 enabled raises instead of
+    flipping the process-global flag from inside the constructor."""
+    import jax
+    prev = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", False)
+    try:
+        with pytest.raises(ValueError, match="enable_f64"):
+            SolverSession(method="cg", grid=(4, 4, 4))
+        assert jax.config.jax_enable_x64 is False     # untouched
+        sess = SolverSession(method="cg", grid=(4, 4, 4),
+                             options=SolverOptions(f64=False))
+        assert jnp.dtype(sess.problem.dtype) == jnp.dtype(jnp.float32)
+    finally:
+        jax.config.update("jax_enable_x64", prev)
+
+
+def test_halo_mode_validation():
+    with pytest.raises(ValueError, match="halo_mode"):
+        SolverOptions(halo_mode="eager")
+    from repro.api.backend import resolve_halo_mode
+    assert resolve_halo_mode(SolverOptions()) == "overlap"
+    assert resolve_halo_mode(SolverOptions(pallas=True)) == "concat"
+    assert resolve_halo_mode(
+        SolverOptions(matvec_padded=lambda xp: xp)) == "concat"
+    assert resolve_halo_mode(SolverOptions(halo_mode="scatter")) == "scatter"
+
+
 def test_hpcg_config_wires_into_facade():
     from repro.configs.hpcg import SOLVER_CONFIGS
     cfg = SOLVER_CONFIGS["hpcg-cg-7pt"]

@@ -14,6 +14,10 @@ import sys
 
 import pytest
 
+# the multi-arch sweep costs minutes; stays in tier-1 (plain pytest) but is
+# deselectable for quick loops via -m "not slow"
+pytestmark = pytest.mark.slow
+
 _SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

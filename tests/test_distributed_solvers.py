@@ -19,6 +19,9 @@ import sys
 
 import pytest
 
+# multi-minute 8-device subprocess sweep; tier-1 (plain pytest) still runs it
+pytestmark = pytest.mark.slow
+
 _SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +

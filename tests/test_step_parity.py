@@ -1,0 +1,97 @@
+"""Step/solver parity: one ``solve_step_shardmap`` iteration must compute the
+SAME numbers as one ``lax.while_loop`` body of the corresponding solver, for
+every method in ``repro.api.REGISTRY``.
+
+The step functions are what the dry-run/roofline lowers for exact
+cost/overlap analysis — if a step drifts from its solver (as the
+gauss_seidel backward sweep once did, silently dropping the forward sweep),
+every per-iteration number derived from it is wrong.  Runs on the trivial
+1-device mesh so the comparison is against the plain local solver.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import REGISTRY
+from repro.core.distributed import solve_step_shardmap
+from repro.core.problems import make_problem
+from repro.core.solvers import SOLVERS, LocalOp
+
+pytestmark = pytest.mark.usefixtures("f64")
+
+SHAPE = (8, 8, 10)
+
+
+def _init_state(method, A, b, x0):
+    """The (b, x, r, p, Ap, an, ad) slots feeding the method's step."""
+    r = b - A.matvec(x0)
+    rr = jnp.vdot(r, r)
+    zero = jnp.zeros(())
+    if method == "cg":
+        return (b, x0, r, r, r, rr, zero)
+    if method == "cg_nb":
+        Ap = A.matvec(r)
+        return (b, x0, r, r, Ap, rr, jnp.vdot(Ap, r))
+    if method == "bicgstab":
+        # Ap slot carries r-hat; an slot carries rho = rhat.r
+        return (b, x0, r, r, r, jnp.vdot(r, r), zero)
+    if method == "bicgstab_b1":
+        rhat = r / jnp.sqrt(rr)
+        return (b, x0, r, r, rhat, jnp.vdot(r, rhat), zero)
+    # stationary methods only read (b, x, r)
+    return (b, x0, r, r, r, rr, zero)
+
+
+#: which output slot carries the squared residual (the BiCGStab steps keep
+#: rho/alpha_n in slot 4 and ||r||^2 in slot 5)
+_RES_SLOT = {"bicgstab": 5, "bicgstab_b1": 5}
+
+
+@pytest.mark.parametrize("method", sorted(REGISTRY))
+def test_one_step_matches_one_solver_iteration(mesh1, method):
+    prob = make_problem(SHAPE, "27pt")
+    A = LocalOp(prob.stencil)
+    b, x0 = prob.b(), prob.x0()
+
+    fn, layout = solve_step_shardmap(prob, method, mesh1)
+    out = jax.jit(fn)(*_init_state(method, A, b, x0))
+    x_step = out[0]
+    res_step = jnp.sqrt(out[_RES_SLOT.get(method, 4)])
+
+    ref = SOLVERS[method](A, b, x0, tol=1e-30, maxiter=1, norm_ref=1.0)
+    assert int(ref.iters) == 1
+
+    if method == "cg_nb":
+        # the solver's x lags one iteration; apply its exit correction to the
+        # step state (same arithmetic as the post-loop line in cg_nb)
+        _, _, p_new, _, an_new, ad_new = out
+        x_step = x_step + (an_new / ad_new) * p_new
+
+    # ULP-tight: the two programs fuse differently (pad vs concat halos,
+    # paired vs separate dots), so allow last-digit rounding only — the
+    # gauss_seidel regression this pins was off by ~1e0, not 1e-13
+    np.testing.assert_allclose(np.asarray(x_step), np.asarray(ref.x),
+                               rtol=1e-13, atol=1e-13, err_msg=method)
+    np.testing.assert_allclose(float(res_step), float(ref.res_norm),
+                               rtol=1e-12, err_msg=method)
+
+
+def test_gauss_seidel_step_applies_both_sweeps(mesh1):
+    """Regression: the backward sweep must consume the forward-sweep result.
+    Feeding it ``x0`` again makes one step equal a *backward-only* sweep of
+    x0 (plus a wasted forward sweep) — strictly worse residual."""
+    from repro.core.solvers import _plane_sweep
+    prob = make_problem(SHAPE, "27pt")
+    A = LocalOp(prob.stencil)
+    b, x0 = prob.b(), prob.x0()
+    fn, _ = solve_step_shardmap(prob, "gauss_seidel", mesh1)
+    out = jax.jit(fn)(*_init_state("gauss_seidel", A, b, x0))
+
+    x_fwd = _plane_sweep(A, b, x0, forward=True)
+    x_sym = _plane_sweep(A, b, x_fwd, forward=False)
+    x_back_only = _plane_sweep(A, b, x0, forward=False)
+
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(x_sym))
+    assert not np.array_equal(np.asarray(out[0]), np.asarray(x_back_only))
