@@ -5,7 +5,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast verify smoke bench examples
+.PHONY: test test-fast verify smoke bench bench-precond examples
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -25,7 +25,13 @@ smoke:
 bench:
 	$(PYTHON) -m benchmarks.run
 
+# measured iteration counts with vs without preconditioning (the
+# reductions-vs-iterations trade-off; see docs/API.md §Preconditioning)
+bench-precond:
+	$(PYTHON) -m benchmarks.table_iterations --precond
+
 examples:
 	$(PYTHON) examples/quickstart.py
 	$(PYTHON) examples/solver_scaling.py
 	$(PYTHON) examples/serve_batched.py
+	$(PYTHON) examples/precond_speedup.py

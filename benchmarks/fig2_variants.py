@@ -84,8 +84,12 @@ def _run_trace(view: str) -> dict | None:
 def main() -> None:
     enable_f64()      # paper precision; owned by the driver, not the facade
     n = 64
+    # the paper's (classical, nonblocking-variant) comparisons only — the
+    # preconditioned forms are variants in lineage, not in barrier structure
+    from repro.api import REGISTRY
     krylov_pairs = [(base, var) for base, var in variant_pairs()
-                    if base in ("cg", "bicgstab")]
+                    if base in ("cg", "bicgstab")
+                    and not REGISTRY[var].accepts_precond]
     for stencil in ("7pt",):
         base = {}
         for classical, variant in krylov_pairs:

@@ -4,7 +4,7 @@ The paper measures wall-clock on MareNostrum4; this repo targets TPU v5e and
 derives the same *relative efficiency* curves from the roofline terms (the
 container is CPU-only — DESIGN.md §7).  Model per iteration and device:
 
-  T = T_mem + T_halo + Σ_r max(0, Λ(n) - hide_r)
+  T = T_mem + T_halo + T_precond + Σ_r max(0, Λ(n) - hide_r)
 
   * T_mem   — the method's touched-elements traffic / HBM bandwidth (the
               paper's own §3.1 memory model; solvers are memory-bound),
@@ -12,6 +12,13 @@ container is CPU-only — DESIGN.md §7).  Model per iteration and device:
               ``halo_mode="overlap"`` each registry-marked SpMV's exchange
               hides behind its interior apply and only the excess
               max(0, t_halo - t_spmv) stays on the critical path,
+  * T_precond — the preconditioner applies' traffic + any halo exchanges
+              they perform (from the repro.precond metadata: applies/iter
+              come from the registry, per-apply touched elements and halo
+              matvecs from the Preconditioner instance; block-Jacobi is
+              communication-free, SSOR's half-sweep exchanges cannot hide).
+              No reduction term: the built-ins add zero reductions — that
+              is the subsystem's design constraint,
   * Λ(n)    — all-reduce latency, λ·ceil(log2 chips)·(1+noise·log2 chips):
               the noise term models the system-noise amplification the paper
               measures (Allreduce 1e-5 s in isolation vs 1e-3 s in
@@ -49,6 +56,7 @@ class MethodModel:
     reductions: tuple         # per reduction: hide window kind
     # hide kinds: "none" (blocking), "spmv", "vec" (one vector update)
     halo_hides: tuple = ()    # per SpMV: "interior" (overlappable) | "none"
+    precond_applies: int = 0  # M^{-1} applications per iteration
 
 
 #: derived from the solver registry — the per-iteration communication
@@ -56,7 +64,7 @@ class MethodModel:
 METHODS = {
     name: MethodModel(name, spec.spmvs_per_iter,
                       tuple((h,) for h in spec.reduction_hides),
-                      spec.halo_hides)
+                      spec.halo_hides, spec.precond_applies_per_iter)
     for name, spec in REGISTRY.items()
 }
 
@@ -65,7 +73,9 @@ def iteration_time(method: str, nbar: int, local_grid: tuple[int, int, int],
                    chips: int, *, dtype_bytes: int = 8,
                    decomposition: str = "1d", noise: str = "tpu",
                    execution: str = "dataflow",
-                   halo_mode: str = "concat") -> float:
+                   halo_mode: str = "concat",
+                   precond: str | None = None,
+                   precond_params: dict | None = None) -> float:
     """``execution``: "mpi" = every reduction blocks (the paper's MPI-only
     baseline); "dataflow" = reductions hide behind their overlap windows
     (what the task runtime buys in the paper / XLA buys here).
@@ -76,6 +86,14 @@ def iteration_time(method: str, nbar: int, local_grid: tuple[int, int, int],
     ``halo_hides="interior"`` — the Gauss-Seidel sweeps read their halos at
     the first plane/colour and stay exposed.  Under ``execution="mpi"``
     halos block regardless (the paper's fork-join exchange_externals).
+
+    ``precond`` adds the t_precond term for the methods that apply one
+    (``REGISTRY[...].precond_applies_per_iter``): per apply, the
+    preconditioner's touched-elements traffic plus its halo exchanges
+    (hidden like a regular SpMV's when the instance marks them
+    ``halo_hide="interior"`` and overlap is on).  This prices ONE
+    iteration; the payoff — fewer iterations — is the other axis of the
+    trade-off (see benchmarks/table_iterations.py for measured counts).
     """
     r = local_grid[0] * local_grid[1] * local_grid[2]
     m = METHODS[method]
@@ -101,6 +119,19 @@ def iteration_time(method: str, nbar: int, local_grid: tuple[int, int, int],
             t_halo += max(0.0, t_halo_spmv - t_spmv)
         else:
             t_halo += t_halo_spmv
+    # preconditioner applies (pcg: 1, pbicgstab: 2, else 0)
+    t_pre = 0.0
+    if precond not in (None, "none") and m.precond_applies:
+        from repro.precond import make_precond
+        inst = make_precond(precond, **(precond_params or {}))
+        t_pre = inst.touched_elements_per_apply(nbar) * r * dtype_bytes / HBM_BW
+        for _ in range(inst.halo_matvecs_per_apply):
+            if (halo_mode == "overlap" and execution == "dataflow"
+                    and inst.halo_hide == "interior"):
+                t_pre += max(0.0, t_halo_spmv - t_spmv)
+            else:
+                t_pre += t_halo_spmv
+        t_pre *= m.precond_applies
     # reductions
     t_red = 0.0
     if chips > 1:
@@ -112,7 +143,7 @@ def iteration_time(method: str, nbar: int, local_grid: tuple[int, int, int],
             else:
                 hide = {"none": 0.0, "vec": t_vec, "spmv": t_spmv}[kind]
             t_red += max(0.0, lat - hide)
-    return t_mem + t_halo + t_red
+    return t_mem + t_halo + t_pre + t_red
 
 
 def weak_efficiency(method: str, nbar: int, chips: int,

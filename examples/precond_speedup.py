@@ -1,0 +1,45 @@
+"""Preconditioning in 60 seconds: fewer iterations, zero extra reductions.
+
+Solves the HPCG system with plain cg/bicgstab and with pcg/pbicgstab under
+each repro.precond implementation, printing the iteration counts side by
+side with the preconditioner's per-apply cost metadata — the two axes of
+the trade-off the scaling model prices (extra local sweeps and halo traffic
+per iteration vs fewer iterations, i.e. fewer all-reduces total).
+
+PYTHONPATH=src python examples/precond_speedup.py
+"""
+
+from repro.api import REGISTRY, SolverOptions, make_precond, solve
+from repro.core.problems import enable_f64
+from repro.precond import PRECONDITIONERS
+
+enable_f64()      # paper precision; the facade never flips x64 itself
+
+GRID = (48, 48, 48)
+PRECONDS = tuple(sorted(PRECONDITIONERS))
+opts = SolverOptions(tol=1e-6, maxiter=700)
+
+for stencil in ("7pt", "27pt"):
+    print(f"\n=== {stencil} stencil, grid={GRID} ===")
+    print("method                      iters  residual   extra apply cost")
+    for method, pmethod in (("cg", "pcg"), ("bicgstab", "pbicgstab")):
+        base = solve(method=method, grid=GRID, stencil=stencil, options=opts)
+        print(f"{method:27s} {int(base.iters):5d}  "
+              f"{float(base.res_norm):9.2e}  -")
+        nbar = 7 if stencil == "7pt" else 27
+        applies = REGISTRY[pmethod].precond_applies_per_iter
+        for name in PRECONDS:
+            res = solve(method=pmethod, grid=GRID, stencil=stencil,
+                        options=opts.replace(precond=name))
+            inst = make_precond(name)
+            cost = applies * inst.touched_elements_per_apply(nbar)
+            halos = applies * inst.halo_matvecs_per_apply
+            assert int(res.iters) <= int(base.iters), (pmethod, name)
+            print(f"{pmethod + '+' + name:27s} {int(res.iters):5d}  "
+                  f"{float(res.res_norm):9.2e}  "
+                  f"+{cost} elems/row/iter, +{halos} halo exch, +0 reductions")
+
+print("\nEvery preconditioner is reduction-free: the iteration savings come "
+      "at zero additional synchronisation,\nso the win grows with the "
+      "all-reduce latency (see benchmarks/fig3_weak_ksm.py breakeven "
+      "curves).")

@@ -1,16 +1,19 @@
 # Unified solver facade (docs/API.md): one entry point for local, sharded
 # and Pallas-backed solves, with batched multi-RHS support for serving.
 from repro.api.backend import (Backend, resolve_backend, resolve_halo_mode,
-                               resolve_matvec)
+                               resolve_matvec, resolve_precond)
 from repro.api.options import HALO_MODES, LAYOUTS, SolverOptions
 from repro.api.registry import (
     REGISTRY,
+    RegistryConsistencyError,
     SolverSpec,
+    check_consistent_with_core,
     get_solver,
     register_solver,
     solver_names,
     variant_pairs,
 )
+from repro.precond import PRECONDITIONERS, Preconditioner, make_precond, precond_names
 from repro.api.session import SolverSession, solve, solve_batched
 from repro.api.timing import timed, timed_result
 
@@ -18,15 +21,22 @@ __all__ = [
     "Backend",
     "HALO_MODES",
     "LAYOUTS",
+    "PRECONDITIONERS",
+    "Preconditioner",
     "REGISTRY",
+    "RegistryConsistencyError",
     "SolverOptions",
     "SolverSession",
     "SolverSpec",
+    "check_consistent_with_core",
     "get_solver",
+    "make_precond",
+    "precond_names",
     "register_solver",
     "resolve_backend",
     "resolve_halo_mode",
     "resolve_matvec",
+    "resolve_precond",
     "solve",
     "solve_batched",
     "solver_names",

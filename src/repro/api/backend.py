@@ -103,6 +103,23 @@ def resolve_matvec(stencil: Stencil,
     return None
 
 
+def resolve_precond(options: SolverOptions):
+    """Build the ``repro.precond.Preconditioner`` ``options`` asks for.
+
+    ``None`` for ``precond="none"``.  ``options.pallas`` flows into the
+    preconditioners that have fused Pallas kernels (``PALLAS_PRECONDS``)
+    unless ``precond_params`` pins ``use_pallas`` explicitly — the same
+    one-flag rule as the stencil SpMV.
+    """
+    if options.precond in (None, "none"):
+        return None
+    from repro.precond import PALLAS_PRECONDS, make_precond
+    params = dict(options.precond_params or {})
+    if options.pallas and options.precond in PALLAS_PRECONDS:
+        params.setdefault("use_pallas", True)
+    return make_precond(options.precond, **params)
+
+
 def resolve_halo_mode(options: SolverOptions) -> str:
     """Resolve ``halo_mode="auto"`` for the distributed operator.
 

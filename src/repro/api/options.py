@@ -15,6 +15,9 @@ from typing import Callable
 #: (see backend.resolve_halo_mode for how "auto" resolves)
 from repro.core.distributed import HALO_MODES
 
+#: accepted ``precond`` values ("none" + the repro.precond registry)
+from repro.precond import precond_names
+
 #: accepted ``layout`` values and what they resolve to (see backend.py)
 LAYOUTS = ("auto", "local", "1d", "2d", "3d")
 
@@ -55,6 +58,17 @@ class SolverOptions:
     matvec_padded: override the padded-operand SpMV (wins over ``pallas``).
     dims_map:     explicit grid-dim -> mesh-axis mapping (advanced; wins
                   over ``layout`` when a mesh is supplied).
+    precond:      preconditioner for the methods that take one (``pcg`` /
+                  ``pbicgstab``): ``"none"`` | ``"jacobi"`` |
+                  ``"block_jacobi"`` | ``"ssor"`` | ``"chebyshev"``
+                  (the ``repro.precond`` registry).  Resolved by
+                  ``backend.resolve_precond``; requesting one with a
+                  method that has no ``M=`` hook raises.
+    precond_params: constructor knobs for the chosen preconditioner
+                  (``{"sweeps": 3}``, ``{"degree": 5}``,
+                  ``{"omega": 1.2}``, ...); ``options.pallas`` flows into
+                  the preconditioners that have fused Pallas kernels
+                  unless ``use_pallas`` is pinned here.
     """
 
     tol: float = 1e-6
@@ -67,8 +81,16 @@ class SolverOptions:
     halo_mode: str = "auto"
     matvec_padded: Callable | None = None
     dims_map: dict[str, str | None] | None = None
+    precond: str = "none"
+    precond_params: dict | None = None
 
     def __post_init__(self):
+        if self.precond not in precond_names():
+            raise ValueError(
+                f"unknown precond {self.precond!r}; "
+                f"options: {precond_names()}")
+        if self.precond_params and self.precond == "none":
+            raise ValueError("precond_params given but precond='none'")
         if self.layout not in LAYOUTS:
             raise ValueError(
                 f"unknown layout {self.layout!r}; options: {LAYOUTS}")

@@ -41,6 +41,8 @@ class SolverSpec:
     variant_of: str | None = None     # classical baseline this method refines
     spd_required: bool = False
     stationary: bool = False          # Jacobi/GS family (vs Krylov)
+    accepts_precond: bool = False     # fn takes M= (repro.precond apply)
+    precond_applies_per_iter: int = 0  # M^{-1} applications per iteration
     description: str = ""
 
     def __post_init__(self):
@@ -51,6 +53,10 @@ class SolverSpec:
             raise ValueError(
                 f"{self.name!r}: halo_hides needs one entry per SpMV "
                 f"({len(self.halo_hides)} != {self.spmvs_per_iter})")
+        if self.precond_applies_per_iter and not self.accepts_precond:
+            raise ValueError(
+                f"{self.name!r}: precond_applies_per_iter without "
+                f"accepts_precond")
 
     @property
     def reductions_per_iter(self) -> int:
@@ -135,6 +141,15 @@ register_solver(SolverSpec(
     description="nonblocking CG (Alg. 1): both reductions off the critical path"))
 
 register_solver(SolverSpec(
+    name="pcg", fn=_solvers.pcg,
+    reduction_hides=("none", "none", "vec"), spmvs_per_iter=1,
+    spd_required=True, variant_of="cg",
+    accepts_precond=True, precond_applies_per_iter=1,
+    description="preconditioned CG (repro.precond): p·Ap and r·z block, "
+                "r·r feeds only the check; +0 reductions from the "
+                "built-in preconditioners"))
+
+register_solver(SolverSpec(
     name="bicgstab", fn=_solvers.bicgstab,
     reduction_hides=("none", "none", "vec"), spmvs_per_iter=2,
     description="classical BiCGStab (3 blocking reductions)"))
@@ -146,14 +161,47 @@ register_solver(SolverSpec(
     description="BiCGStab one-blocking (Alg. 2) with restart"))
 
 
-def _check_consistent_with_core() -> None:
-    """The registry must cover exactly what core.solvers exports."""
-    assert set(REGISTRY) == set(_solvers.SOLVERS), (
-        sorted(REGISTRY), sorted(_solvers.SOLVERS))
-    for name, spec in REGISTRY.items():
-        assert spec.fn is _solvers.SOLVERS[name], name
-    for variant, base in _solvers.VARIANT_OF.items():
-        assert REGISTRY[variant].variant_of == base, (variant, base)
+register_solver(SolverSpec(
+    name="pbicgstab", fn=_solvers.pbicgstab,
+    reduction_hides=("none", "none", "vec"), spmvs_per_iter=2,
+    variant_of="bicgstab",
+    accepts_precond=True, precond_applies_per_iter=2,
+    description="right-preconditioned BiCGStab (true-residual stopping)"))
 
 
-_check_consistent_with_core()
+class RegistryConsistencyError(RuntimeError):
+    """The registry drifted from what ``core.solvers`` exports."""
+
+
+def check_consistent_with_core(registry=None, solvers=None,
+                               variant_of=None) -> None:
+    """The registry must cover exactly what core.solvers exports.
+
+    Raises :class:`RegistryConsistencyError` — deliberately NOT ``assert``:
+    this guard runs at import time and must survive ``python -O`` / ``-OO``,
+    where asserts are compiled away (the bug this replaces: a drifted
+    registry imported cleanly under optimised bytecode).  The keyword
+    arguments exist so tests can feed deliberately inconsistent tables;
+    production callers use the defaults.
+    """
+    registry = REGISTRY if registry is None else registry
+    solvers = _solvers.SOLVERS if solvers is None else solvers
+    variant_of = _solvers.VARIANT_OF if variant_of is None else variant_of
+    if set(registry) != set(solvers):
+        raise RegistryConsistencyError(
+            f"method sets differ: registry-only="
+            f"{sorted(set(registry) - set(solvers))}, "
+            f"core-only={sorted(set(solvers) - set(registry))}")
+    for name, spec in registry.items():
+        if spec.fn is not solvers[name]:
+            raise RegistryConsistencyError(
+                f"{name!r}: registered fn is not core.solvers.SOLVERS[{name!r}]")
+    for variant, base in variant_of.items():
+        if variant not in registry or registry[variant].variant_of != base:
+            raise RegistryConsistencyError(
+                f"{variant!r}: registry variant_of="
+                f"{registry[variant].variant_of if variant in registry else '<missing>'!r}"
+                f" but core says {base!r}")
+
+
+check_consistent_with_core()

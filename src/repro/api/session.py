@@ -30,7 +30,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.api.backend import (Backend, resolve_backend, resolve_halo_mode,
-                               resolve_matvec)
+                               resolve_matvec, resolve_precond)
 from repro.api.options import SolverOptions
 from repro.api.registry import SolverSpec, get_solver
 from repro.api.timing import timed_result
@@ -83,6 +83,22 @@ class SolverSession:
                                                            mesh=mesh)
         self._matvec = resolve_matvec(problem.stencil, self.options)
         self.halo_mode = resolve_halo_mode(self.options)
+        self.precond = resolve_precond(self.options)
+        if self.precond is not None and not self.spec.accepts_precond:
+            from repro.api.registry import REGISTRY
+            takers = sorted(n for n, s in REGISTRY.items()
+                            if s.accepts_precond)
+            raise ValueError(
+                f"method {self.method!r} takes no preconditioner; use one "
+                f"of {takers} with precond={self.options.precond!r}, or "
+                f"precond='none'")
+        if (self.precond is not None and self.spec.spd_required
+                and not self.precond.spd_preserving):
+            raise ValueError(
+                f"method {self.method!r} requires an SPD-preserving "
+                f"preconditioner, but {self.precond.describe()} declares "
+                f"spd_preserving=False; use pbicgstab or an SPD-preserving "
+                f"M (CG's short recurrence silently breaks down otherwise)")
         self._fn = None          # compiled single-RHS solve
         self._batched_fn = None  # compiled multi-RHS solve
 
@@ -96,9 +112,18 @@ class SolverSession:
         return self.backend.layout
 
     def describe(self) -> str:
+        pre = (f" precond={self.precond.describe()}"
+               if self.precond is not None else "")
         return (f"{self.method}/{self.problem.stencil.name} "
                 f"grid={self.problem.shape} on {self.backend.describe()}"
-                f"{' [pallas]' if self.options.pallas else ''}")
+                f"{' [pallas]' if self.options.pallas else ''}{pre}")
+
+    def _solver_kwargs(self, A) -> dict:
+        """tol/maxiter/norm_ref plus the bound preconditioner apply."""
+        kw = self.options.solver_kwargs()
+        if self.spec.accepts_precond:
+            kw["M"] = None if self.precond is None else self.precond.bind(A)
+        return kw
 
     # -- single-RHS path ------------------------------------------------------
     def _build_fn(self):
@@ -108,14 +133,14 @@ class SolverSession:
 
             def run(b, x0):
                 return self.spec.fn(A, b, x0, dot=opts.dot,
-                                    **opts.solver_kwargs())
+                                    **self._solver_kwargs(A))
 
             return jax.jit(run)
         fn, _ = solve_shardmap(
             self.problem, self.method, self.backend.mesh,
             dims_map=opts.dims_map, tol=opts.tol, maxiter=opts.maxiter,
             norm_ref=opts.norm_ref, matvec_padded=self._matvec,
-            halo_mode=self.halo_mode)
+            halo_mode=self.halo_mode, precond=self.precond)
         return jax.jit(fn)
 
     def _place(self, x: jax.Array, *, batched: bool = False) -> jax.Array:
@@ -155,7 +180,7 @@ class SolverSession:
 
             def run(b, x0):
                 return self.spec.fn(A, b, x0, dot=opts.dot,
-                                    **opts.solver_kwargs())
+                                    **self._solver_kwargs(A))
 
             return jax.jit(jax.vmap(run))
 
@@ -166,7 +191,7 @@ class SolverSession:
             op = DistributedOp(stencil, layout, matvec_padded=self._matvec,
                                halo_mode=self.halo_mode)
             return self.spec.fn(op, b_loc, x0_loc, dot=op.dot,
-                                **opts.solver_kwargs())
+                                **self._solver_kwargs(op))
 
         bspec = P(None, *layout.dim_axes)
         fn = shard_map(
@@ -219,7 +244,7 @@ class SolverSession:
         return solve_step_shardmap(
             self.problem, self.method, self.backend.mesh,
             dims_map=self.options.dims_map, matvec_padded=self._matvec,
-            halo_mode=self.halo_mode)
+            halo_mode=self.halo_mode, precond=self.precond)
 
 
 # -- one-shot facades ---------------------------------------------------------

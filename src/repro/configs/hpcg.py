@@ -20,11 +20,12 @@ class SolverConfig:
     tol: float = 1e-6
     maxiter: int = 600
     weak_scaling: bool = True    # grid grows with devices (along mapped dims)
+    precond: str = "none"        # repro.precond registry key (pcg/pbicgstab)
 
     def to_options(self, **overrides):
         """The cell's ``repro.api.SolverOptions`` (facade kwargs win)."""
         from repro.api import SolverOptions
-        kw = dict(tol=self.tol, maxiter=self.maxiter)
+        kw = dict(tol=self.tol, maxiter=self.maxiter, precond=self.precond)
         kw.update(overrides)
         return SolverOptions(**kw)
 
@@ -41,6 +42,15 @@ class SolverConfig:
 SOLVER_CONFIGS = {
     f"hpcg-{m}-{s}": SolverConfig(name=f"hpcg-{m}-{s}", method=m, stencil=s)
     for m in ("jacobi", "gauss_seidel", "gauss_seidel_rb", "cg", "cg_nb",
-              "bicgstab", "bicgstab_b1")
+              "bicgstab", "bicgstab_b1", "pcg", "pbicgstab")
     for s in ("7pt", "27pt")
 }
+
+# preconditioned PCG cells (the production workload: same system, a fraction
+# of the iterations, zero extra reductions per iteration)
+SOLVER_CONFIGS.update({
+    f"hpcg-pcg-{p}-{s}": SolverConfig(
+        name=f"hpcg-pcg-{p}-{s}", method="pcg", stencil=s, precond=p)
+    for p in ("jacobi", "block_jacobi", "ssor", "chebyshev")
+    for s in ("7pt", "27pt")
+})

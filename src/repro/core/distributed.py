@@ -182,6 +182,15 @@ class DistributedOp:
             return self._matvec_overlap(x)
         return self._mv_padded(self.pad_exchange(x))
 
+    def matvec_local(self, x: jax.Array) -> jax.Array:
+        """Zero-halo apply on the local block ONLY — no ppermutes.
+
+        The block-diagonal operator of the block-Jacobi preconditioner
+        (two-stage multisplitting): decomposed faces are treated as
+        physical boundary, so the apply is communication-free.
+        """
+        return self._mv_padded(jnp.pad(x, 1))
+
     def _matvec_overlap(self, x: jax.Array) -> jax.Array:
         """Overlapped halo-exchange SpMV (the paper's task-based split).
 
@@ -249,10 +258,15 @@ def solve_shardmap(
     norm_ref: float | None = 1.0,   # paper: absolute ||r|| < eps (HPCCG criterion)
     matvec_padded: Callable | None = None,
     halo_mode: str = "auto",
+    precond=None,
 ):
     """Build the shard_map-wrapped distributed solver; returns (fn, in_specs).
 
     ``fn(b, x0) -> SolveResult`` with b/x0 GLOBAL arrays sharded per layout.
+    ``precond`` is a ``repro.precond.Preconditioner`` (or None); it is bound
+    to the DistributedOp *inside* shard_map, so its applies see the local
+    block and the mesh's halo machinery — same write-once rule as the
+    solvers.  Only methods taking an ``M=`` kwarg (pcg/pbicgstab) accept it.
     """
     layout = make_layout(mesh, dims_map)
     solver = SOLVERS[method]
@@ -261,9 +275,10 @@ def solve_shardmap(
     def local_solve(b_loc: jax.Array, x0_loc: jax.Array) -> SolveResult:
         op = DistributedOp(stencil, layout, matvec_padded=matvec_padded,
                            halo_mode=halo_mode)
+        kw = {} if precond is None else {"M": precond.bind(op)}
         return solver(
             op, b_loc, x0_loc, tol=tol, maxiter=maxiter,
-            dot=op.dot, norm_ref=norm_ref,
+            dot=op.dot, norm_ref=norm_ref, **kw,
         )
 
     spec = layout.spec()
@@ -284,6 +299,7 @@ def solve_step_shardmap(
     dims_map: dict[str, str | None] | None = None,
     matvec_padded: Callable | None = None,
     halo_mode: str = "auto",
+    precond=None,
 ):
     """One *iteration* of the solver as a standalone shard_mapped function.
 
@@ -323,6 +339,20 @@ def solve_step_shardmap(
             r = b_loc - op.matvec(x)
             rr = op.dot(r, r)
             return x, r, p_loc, Ap_loc, rr, ad
+        elif method == "pcg":
+            # p slot = p, Ap slot carries z; an slot = rz (with M=None the
+            # state degenerates to cg's: z == r, rz == rr)
+            M = precond.bind(op) if precond is not None else (lambda v: v)
+            Ap = op.matvec(p_loc)
+            pAp = op.dot(p_loc, Ap)         # blocking
+            alpha = an / pAp
+            x = x_loc + alpha * p_loc
+            r = r_loc - alpha * Ap
+            z = M(r)
+            rz, rr = op.dot2(r, z, r, r)
+            beta = rz / an
+            p = z + beta * p_loc
+            return x, r, p, z, rz, rr
         elif method == "bicgstab":
             # one classical BiCGStab iteration (3 blocking reductions);
             # the Ap slot carries r-hat for the step driver.
@@ -335,6 +365,25 @@ def solve_step_shardmap(
             ts, tt = op.dot2(t, s, t, t)        # barrier 2
             omega = ts / tt
             x = x_loc + alpha * p_loc + omega * s
+            r = s - omega * t
+            rho_new, rr = op.dot2(rhat, r, r, r)  # barrier 3
+            beta = (rho_new / an) * (alpha / omega)
+            p = r + beta * (p_loc - omega * v)
+            return x, r, p, rhat, rho_new, rr
+        elif method == "pbicgstab":
+            # right-preconditioned BiCGStab; Ap slot carries r-hat
+            M = precond.bind(op) if precond is not None else (lambda v: v)
+            rhat = Ap_loc
+            phat = M(p_loc)
+            v = op.matvec(phat)
+            rhat_v = op.dot(rhat, v)            # barrier 1
+            alpha = an / rhat_v                 # an slot = rho
+            s = r_loc - alpha * v
+            shat = M(s)
+            t = op.matvec(shat)
+            ts, tt = op.dot2(t, s, t, t)        # barrier 2
+            omega = ts / tt
+            x = x_loc + alpha * phat + omega * shat
             r = s - omega * t
             rho_new, rr = op.dot2(rhat, r, r, r)  # barrier 3
             beta = (rho_new / an) * (alpha / omega)

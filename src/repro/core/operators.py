@@ -293,6 +293,12 @@ def touched_elements_per_iter(method: str, nbar: int) -> int:
         "cg_nb": 15 + nbar,
         "bicgstab": 21 + 2 * nbar,
         "bicgstab_b1": 24 + 2 * nbar,
+        # preconditioned forms: the baseline's traffic + the z (pcg) or
+        # phat/shat (pbicgstab) vector updates; the preconditioner apply's
+        # own traffic is accounted separately (Preconditioner.
+        # touched_elements_per_apply × SolverSpec.precond_applies_per_iter)
+        "pcg": 16 + nbar,
+        "pbicgstab": 27 + 2 * nbar,
         "jacobi": 4 + nbar,
         "gauss_seidel": 6 + 2 * nbar,
         # red-black symmetric GS: 4 coloured half-sweeps + residual, each

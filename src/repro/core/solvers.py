@@ -33,6 +33,14 @@ Barrier structure reproduced from the paper (§3.1, Fig. 1):
                         across blocks (the role the benign data races play in
                         the paper's Code 4).
   * ``sym_gauss_seidel_rb``      — red-black coloured symmetric GS (§3.4).
+
+Beyond the paper (PR 3): ``pcg`` / ``pbicgstab`` are the preconditioned
+forms of the classical methods, written against the same operator protocol
+plus one extra hook — ``M``, the bound ``z = M^{-1} r`` apply built by
+``repro.precond`` (point-Jacobi, block-Jacobi, SSOR, Chebyshev).  With
+``M=None`` they reduce arithmetically to ``cg`` / ``bicgstab``; convergence
+is always judged on the TRUE residual so iteration counts stay comparable
+across preconditioners.
 """
 
 from __future__ import annotations
@@ -71,6 +79,11 @@ class LocalOp:
 
     def matvec(self, x: jax.Array) -> jax.Array:
         return self._mv_padded(self.pad_exchange(x))
+
+    def matvec_local(self, x: jax.Array) -> jax.Array:
+        """Zero-halo apply on the local block (block-Jacobi's inner operator).
+        On a single device the block IS the domain, so this == matvec."""
+        return self.matvec(x)
 
 
 def _default_dot(a: jax.Array, b: jax.Array) -> jax.Array:
@@ -166,6 +179,51 @@ def cg_nb(A, b, x0, *, tol=1e-6, maxiter=500, dot=None, norm_ref=None) -> SolveR
     return SolveResult(x=x, iters=k, res_norm=jnp.sqrt(an), history=hist)
 
 
+def pcg(A, b, x0, *, tol=1e-6, maxiter=500, dot=None, norm_ref=None,
+        M=None) -> SolveResult:
+    """Preconditioned CG.
+
+    ``M`` is the bound ``z = M^{-1} r`` apply (``repro.precond``; must be
+    SPD-preserving — the registry's ``spd_preserving`` flag).  ``M=None``
+    is the identity, which makes pcg arithmetically identical to ``cg``.
+    3 reductions/iter: ``p·Ap`` blocks, ``r·z`` blocks (feeds β), ``r·r``
+    only feeds the convergence check and overlaps the next apply.  The
+    check stays on the TRUE residual ``||r||`` (not the M-norm), so
+    iteration counts are comparable with ``cg`` at the same tolerance.
+    """
+    dot, _, thresh2 = _prepare(A, b, dot, norm_ref, tol)
+    apply_M = M if M is not None else (lambda v: v)
+    r = b - A.matvec(x0)
+    z = apply_M(r)
+    p = z
+    rz = dot(r, z)
+    rr = dot(r, r)
+    hist = _hist_init(maxiter, jnp.sqrt(rr), b.dtype)
+
+    def cond(c):
+        _, _, _, _, rr, k, _ = c
+        return (rr >= thresh2) & (k < maxiter)
+
+    def body(c):
+        x, r, p, rz, rr, k, hist = c
+        Ap = A.matvec(p)
+        pAp = dot(p, Ap)              # blocking: feeds alpha immediately
+        alpha = rz / pAp
+        x = x + alpha * p
+        r = r - alpha * Ap
+        z = apply_M(r)
+        rz_new = dot(r, z)            # blocking: feeds beta
+        rr_new = dot(r, r)            # check only: overlaps the next apply
+        beta = rz_new / rz
+        p = z + beta * p
+        hist = hist.at[k + 1].set(jnp.sqrt(rr_new).astype(hist.dtype))
+        return (x, r, p, rz_new, rr_new, k + 1, hist)
+
+    x, r, p, rz, rr, k, hist = lax.while_loop(
+        cond, body, (x0, r, p, rz, rr, 0, hist))
+    return SolveResult(x=x, iters=k, res_norm=jnp.sqrt(rr), history=hist)
+
+
 def bicgstab(A, b, x0, *, tol=1e-6, maxiter=500, dot=None, norm_ref=None) -> SolveResult:
     """Classical BiCGStab (3 blocking reductions per iteration)."""
     dot, _, thresh2 = _prepare(A, b, dot, norm_ref, tol)
@@ -191,6 +249,57 @@ def bicgstab(A, b, x0, *, tol=1e-6, maxiter=500, dot=None, norm_ref=None) -> Sol
         tt = dot(t, t)
         omega = ts / tt
         x = x + alpha * p + omega * s
+        r = s - omega * t
+        rho_new = dot(rhat, r)                # barrier 3 (fused pair of dots)
+        rr_new = dot(r, r)
+        beta = (rho_new / rho) * (alpha / omega)
+        p = r + beta * (p - omega * v)
+        hist = hist.at[k + 1].set(jnp.sqrt(rr_new).astype(hist.dtype))
+        return (x, r, rhat, p, rho_new, rr_new, k + 1, hist)
+
+    x, r, rhat, p, rho, rr, k, hist = lax.while_loop(
+        cond, body, (x0, r, rhat, p, rho, rr, 0, hist)
+    )
+    return SolveResult(x=x, iters=k, res_norm=jnp.sqrt(rr), history=hist)
+
+
+def pbicgstab(A, b, x0, *, tol=1e-6, maxiter=500, dot=None, norm_ref=None,
+              M=None) -> SolveResult:
+    """Right-preconditioned BiCGStab (``A M^{-1} y = b``, ``x = M^{-1} y``).
+
+    Right preconditioning keeps ``r`` the TRUE residual, so the stopping
+    criterion and iteration counts are directly comparable with
+    ``bicgstab``; ``M`` need not be SPD-preserving.  ``M=None`` reduces
+    arithmetically to classical BiCGStab.  Barrier structure unchanged
+    (3 blocking reduction points) — the two ``M`` applies add stencil
+    sweeps but no reductions for the built-in preconditioners.
+    """
+    dot, _, thresh2 = _prepare(A, b, dot, norm_ref, tol)
+    apply_M = M if M is not None else (lambda v: v)
+    r = b - A.matvec(x0)
+    rhat = r
+    p = r
+    rho = dot(rhat, r)
+    rr = dot(r, r)
+    hist = _hist_init(maxiter, jnp.sqrt(rr), b.dtype)
+
+    def cond(c):
+        _, _, _, _, rho, rr, k, _ = c
+        return (rr >= thresh2) & (k < maxiter)
+
+    def body(c):
+        x, r, rhat, p, rho, rr, k, hist = c
+        phat = apply_M(p)
+        v = A.matvec(phat)
+        rhat_v = dot(rhat, v)                 # barrier 1
+        alpha = rho / rhat_v
+        s = r - alpha * v
+        shat = apply_M(s)
+        t = A.matvec(shat)
+        ts = dot(t, s)                        # barrier 2 (fused pair of dots)
+        tt = dot(t, t)
+        omega = ts / tt
+        x = x + alpha * phat + omega * shat
         r = s - omega * t
         rho_new = dot(rhat, r)                # barrier 3 (fused pair of dots)
         rr_new = dot(r, r)
@@ -392,9 +501,14 @@ SOLVERS: dict[str, Callable] = {
     "gauss_seidel_rb": sym_gauss_seidel_rb,
     "cg": cg,
     "cg_nb": cg_nb,
+    "pcg": pcg,
     "bicgstab": bicgstab,
     "bicgstab_b1": bicgstab_b1,
+    "pbicgstab": pbicgstab,
 }
 
-#: methods proposed by the paper mapped to their classical baselines
-VARIANT_OF = {"cg_nb": "cg", "bicgstab_b1": "bicgstab", "gauss_seidel": "gauss_seidel_rb"}
+#: methods refining a classical baseline (the paper's variants + the
+#: preconditioned forms) mapped to that baseline
+VARIANT_OF = {"cg_nb": "cg", "bicgstab_b1": "bicgstab",
+              "gauss_seidel": "gauss_seidel_rb",
+              "pcg": "cg", "pbicgstab": "bicgstab"}

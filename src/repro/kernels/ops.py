@@ -21,6 +21,10 @@ from repro.kernels.fused_axpby import (
     fused_axpby_dot as _fused_axpby_dot,
 )
 from repro.kernels.flash_attention import flash_attention as _flash_attention
+from repro.kernels.precond import (
+    block_jacobi_sweep as _block_jacobi_sweep,
+    cheb_fused_step as _cheb_fused_step,
+)
 from repro.kernels.rb_gs import rb_gs_half_sweep as _rb_gs_half_sweep
 from repro.kernels.stencil_spmv import stencil_spmv as _stencil_spmv
 
@@ -54,6 +58,18 @@ def cg_update(beta, r, ar, p, ap):
 def gs_half_sweep(xp, b, stencil: Stencil, colour: int, *, bz: int = 8):
     return _rb_gs_half_sweep(
         xp, b, stencil=stencil, colour=colour, bz=bz, interpret=_interpret()
+    )
+
+
+def cheb_step(zp, r, d, stencil: Stencil, *, a: float, c: float, bz: int = 8):
+    return _cheb_fused_step(
+        zp, r, d, stencil=stencil, a=a, c=c, bz=bz, interpret=_interpret()
+    )
+
+
+def jacobi_sweep(zp, r, stencil: Stencil, *, omega: float = 1.0, bz: int = 8):
+    return _block_jacobi_sweep(
+        zp, r, stencil=stencil, omega=omega, bz=bz, interpret=_interpret()
     )
 
 

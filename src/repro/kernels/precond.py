@@ -1,0 +1,119 @@
+"""Pallas TPU kernels for the preconditioner hot paths.
+
+Two fused kernels, both on the ``stencil_spmv`` overlapping-window z-slab
+tiling ((nx+2, ny+2, bz+2) VMEM windows, HBM traffic (bz+2)/bz):
+
+  * ``cheb_fused_step`` — one Chebyshev recurrence step in ONE VMEM pass:
+    the stencil apply ``A z`` plus the whole axpby chain
+    ``d' = a·d + c·(r - A z); z' = z + d'``.  Unfused this is a matvec
+    kernel plus two vector sweeps (the ``fused_axpby`` pattern); fusion
+    removes both extra HBM round trips.  The coefficients ``a, c`` come
+    from the *static* Chebyshev scalar schedule (precomputed from the
+    Gershgorin bounds — see precond/chebyshev.py), so they are baked into
+    the kernel as compile-time constants: the whole apply is a chain of
+    ``degree-1`` such calls with no scalar traffic at all.
+
+  * ``block_jacobi_sweep`` — one damped local Jacobi sweep
+    ``z' = z + ω·(r - A z)/diag`` in one pass, the inner iteration of the
+    block-Jacobi (two-stage multisplitting) preconditioner.  The caller
+    zero-pads ``z`` (decomposed faces are physical boundary for the block
+    operator), so the kernel is communication-free by construction.
+
+Pure-jnp oracles live in kernels/ref.py; dispatch wrappers in
+kernels/ops.py (interpret mode off-TPU, like every kernel here).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+from jax.experimental import pallas as pl
+
+from repro.core.operators import Stencil
+from repro.kernels.stencil_spmv import _pick_bz, _window_spec, apply_stencil_slab
+
+
+def _cheb_kernel(stencil: Stencil, nx: int, ny: int, bz: int,
+                 a: float, c: float):
+    def body(zin, rin, din, zout, dout):
+        z_slab = zin[...]
+        az = apply_stencil_slab(stencil, z_slab, nx, ny, bz)
+        d_new = a * din[...] + c * (rin[...] - az)
+        dout[...] = d_new
+        zout[...] = z_slab[1:-1, 1:-1, 1:-1] + d_new
+
+    return body
+
+
+@functools.partial(
+    jax.jit, static_argnames=("stencil", "a", "c", "bz", "interpret")
+)
+def cheb_fused_step(
+    zp: jax.Array,
+    r: jax.Array,
+    d: jax.Array,
+    *,
+    stencil: Stencil,
+    a: float,
+    c: float,
+    bz: int = 8,
+    interpret: bool = True,
+):
+    """One fused Chebyshev step from the halo-padded ``zp``.
+
+    Returns ``(z_new, d_new)`` with ``d_new = a·d + c·(r - A z)`` and
+    ``z_new = z + d_new``; shapes (nx, ny, nz) from ``zp``'s interior.
+    """
+    nx, ny, nz = r.shape
+    bzz = _pick_bz(nz, bz)
+    slab = pl.BlockSpec((nx, ny, bzz), lambda i: (0, 0, i))
+    z_new, d_new = pl.pallas_call(
+        _cheb_kernel(stencil, nx, ny, bzz, a, c),
+        grid=(nz // bzz,),
+        in_specs=[_window_spec(nx, ny, bzz), slab, slab],
+        out_specs=[slab, slab],
+        out_shape=[
+            jax.ShapeDtypeStruct((nx, ny, nz), r.dtype),
+            jax.ShapeDtypeStruct((nx, ny, nz), r.dtype),
+        ],
+        interpret=interpret,
+    )(zp, r, d)
+    return z_new, d_new
+
+
+def _bj_kernel(stencil: Stencil, nx: int, ny: int, bz: int, omega: float):
+    def body(zin, rin, out):
+        z_slab = zin[...]
+        az = apply_stencil_slab(stencil, z_slab, nx, ny, bz)
+        out[...] = z_slab[1:-1, 1:-1, 1:-1] + omega * (rin[...] - az) / stencil.diag
+
+    return body
+
+
+@functools.partial(
+    jax.jit, static_argnames=("stencil", "omega", "bz", "interpret")
+)
+def block_jacobi_sweep(
+    zp: jax.Array,
+    r: jax.Array,
+    *,
+    stencil: Stencil,
+    omega: float = 1.0,
+    bz: int = 8,
+    interpret: bool = True,
+) -> jax.Array:
+    """``z + ω·(r - A z)/diag`` from the zero-padded local ``zp``, one pass."""
+    nx, ny, nz = r.shape
+    bzz = _pick_bz(nz, bz)
+    return pl.pallas_call(
+        _bj_kernel(stencil, nx, ny, bzz, omega),
+        grid=(nz // bzz,),
+        in_specs=[
+            _window_spec(nx, ny, bzz),
+            pl.BlockSpec((nx, ny, bzz), lambda i: (0, 0, i)),
+        ],
+        out_specs=pl.BlockSpec((nx, ny, bzz), lambda i: (0, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((nx, ny, nz), r.dtype),
+        interpret=interpret,
+    )(zp, r)

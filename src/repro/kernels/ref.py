@@ -51,6 +51,19 @@ def flash_attention_ref(q, k, v, *, window: int = 0):
     return jnp.einsum("bhst,bthn->bshn", w, v)
 
 
+def cheb_fused_step_ref(zp: jax.Array, r: jax.Array, d: jax.Array, *,
+                        stencil: Stencil, a: float, c: float):
+    az = stencil.matvec_padded(zp)
+    d_new = a * d + c * (r - az)
+    return zp[1:-1, 1:-1, 1:-1] + d_new, d_new
+
+
+def block_jacobi_sweep_ref(zp: jax.Array, r: jax.Array, *, stencil: Stencil,
+                           omega: float = 1.0):
+    az = stencil.matvec_padded(zp)
+    return zp[1:-1, 1:-1, 1:-1] + omega * (r - az) / stencil.diag
+
+
 def rb_gs_half_sweep_ref(xp: jax.Array, b: jax.Array, *, stencil: Stencil, colour: int):
     x = xp[1:-1, 1:-1, 1:-1]
     off = stencil.offdiag_apply_padded(xp)

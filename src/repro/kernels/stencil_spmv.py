@@ -51,11 +51,27 @@ def _pick_bz(nz: int, requested: int) -> int:
     return bz
 
 
-def _kernel(stencil: Stencil, nx: int, ny: int, bz: int, fuse_dot: bool):
+def apply_stencil_slab(stencil: Stencil, x_slab, nx: int, ny: int, bz: int):
+    """``A x`` on one (nx+2, ny+2, bz+2) window -> (nx, ny, bz) slab.
+
+    The shared slab-apply of every stencil-consuming kernel (SpMV here,
+    the fused preconditioner steps in kernels/precond.py): z-offsets are
+    grouped so each of the three z-planes is sliced once.
+    """
     off_groups: dict[int, list[tuple[int, int]]] = {-1: [], 0: [], 1: []}
     for dx, dy, dz in stencil.offsets:
         off_groups[dz].append((dx, dy))
+    y = stencil.diag * x_slab[1:-1, 1:-1, 1:-1]
+    for dz, xy in off_groups.items():
+        zsl = x_slab[:, :, 1 + dz : 1 + dz + bz]
+        for dx, dy in xy:
+            y = y + stencil.off_coeff * zsl[
+                1 + dx : 1 + dx + nx, 1 + dy : 1 + dy + ny, :
+            ]
+    return y
 
+
+def _kernel(stencil: Stencil, nx: int, ny: int, bz: int, fuse_dot: bool):
     def body(*refs):
         if fuse_dot:
             xin, out, acc = refs
@@ -64,13 +80,7 @@ def _kernel(stencil: Stencil, nx: int, ny: int, bz: int, fuse_dot: bool):
         # xin: (nx+2, ny+2, bz+2) overlapping window; out: (nx, ny, bz)
         x_slab = xin[...]
         centre = x_slab[1:-1, 1:-1, 1:-1]
-        y = stencil.diag * centre
-        for dz, xy in off_groups.items():
-            zsl = x_slab[:, :, 1 + dz : 1 + dz + bz]
-            for dx, dy in xy:
-                y = y + stencil.off_coeff * zsl[
-                    1 + dx : 1 + dx + nx, 1 + dy : 1 + dy + ny, :
-                ]
+        y = apply_stencil_slab(stencil, x_slab, nx, ny, bz)
         out[...] = y
         if fuse_dot:
             i = pl.program_id(0)

@@ -1,20 +1,27 @@
 """Distributed solver driver — the paper's workload end-to-end.
 
 A thin client of ``repro.api``: backend resolution (local / 1-D paper-faithful
-/ 2-D / 3-D shard_map), kernel choice (XLA vs Pallas) and timing all live in
-the facade; this module only parses flags.
+/ 2-D / 3-D shard_map), kernel choice (XLA vs Pallas), preconditioning and
+timing all live in the facade; this module only parses flags.
 
 PYTHONPATH=src python -m repro.launch.solve --method cg_nb --stencil 27pt \
     --grid 64 64 64
+
+# preconditioned: pcg/pbicgstab take --precond (repro.precond registry);
+# compare the iters/res_norm fields of the JSON result against the plain run
+PYTHONPATH=src python -m repro.launch.solve --method pcg --precond chebyshev \
+    --stencil 27pt --grid 64 64 64 --json
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 
 import jax.numpy as jnp
 
-from repro.api import LAYOUTS, SolverOptions, SolverSession, solver_names
+from repro.api import (LAYOUTS, SolverOptions, SolverSession, precond_names,
+                       solver_names)
 from repro.configs.hpcg import SOLVER_CONFIGS
 from repro.core.problems import enable_f64
 
@@ -37,6 +44,13 @@ def main(argv=None) -> dict:
     ap.add_argument("--pallas", action=argparse.BooleanOptionalAction,
                     default=False,
                     help="use the Pallas stencil kernel for the local SpMV")
+    ap.add_argument("--precond", default=None, choices=list(precond_names()),
+                    help="preconditioner for pcg/pbicgstab (repro.precond): "
+                         "jacobi | block_jacobi | ssor | chebyshev; "
+                         "cuts iterations at the cost of extra local sweeps "
+                         "but zero extra reductions")
+    ap.add_argument("--json", action="store_true",
+                    help="also print the result record as one JSON line")
     ap.add_argument("--batch", type=int, default=0,
                     help="also solve N random right-hand sides in one "
                          "compiled call (the serving path)")
@@ -52,6 +66,8 @@ def main(argv=None) -> dict:
         # facade refuses to flip it implicitly (see SolverOptions.f64)
         enable_f64()
     overrides = dict(f64=args.f64, layout=args.layout, pallas=args.pallas)
+    if args.precond is not None:
+        overrides["precond"] = args.precond
     if args.tol is not None:
         overrides["tol"] = args.tol
     if args.maxiter is not None:
@@ -64,10 +80,14 @@ def main(argv=None) -> dict:
     dt = stats["median"]
 
     err = float(jnp.max(jnp.abs(res.x - sess.problem.x_true())))
-    print(f"[solve] {method}/{stencil} grid={tuple(args.grid)} "
+    print(f"[solve] {sess.describe()} "
           f"iters={int(res.iters)} res={float(res.res_norm):.3e} "
-          f"err_inf={err:.3e} wall={dt:.2f}s backend={sess.backend.describe()}")
-    out = {"iters": int(res.iters), "res_norm": float(res.res_norm),
+          f"err_inf={err:.3e} wall={dt:.2f}s")
+    # iters + achieved residual ride along with the timing for EVERY method,
+    # so preconditioned and plain runs are directly comparable from the JSON
+    out = {"method": method, "stencil": stencil,
+           "precond": sess.options.precond,
+           "iters": int(res.iters), "res_norm": float(res.res_norm),
            "err": err, "wall_s": dt, "backend": sess.backend.describe()}
 
     if args.batch:
@@ -79,6 +99,10 @@ def main(argv=None) -> dict:
         print(f"[solve] batched x{args.batch}: iters="
               f"{np.asarray(bres.iters).tolist()} wall={bstats['median']:.2f}s")
         out["batch_wall_s"] = bstats["median"]
+        out["batch_iters"] = np.asarray(bres.iters).tolist()
+        out["batch_res_norm"] = np.asarray(bres.res_norm).tolist()
+    if args.json:
+        print(json.dumps(out))
     return out
 
 

@@ -1,0 +1,31 @@
+# The preconditioning subsystem (docs/API.md §Preconditioning): a small
+# Preconditioner protocol with four reduction-free implementations, consumed
+# by the pcg/pbicgstab solvers through SolverOptions.precond.  Importing the
+# implementation modules registers them.
+from repro.precond.base import (
+    PRECONDITIONERS,
+    Preconditioner,
+    make_precond,
+    precond_names,
+    register_preconditioner,
+)
+from repro.precond.chebyshev import Chebyshev, gershgorin_bounds
+from repro.precond.jacobi import BlockJacobi, PointJacobi
+from repro.precond.ssor import SSOR
+
+#: preconditioners with a fused Pallas kernel behind ``use_pallas=True``
+PALLAS_PRECONDS = ("block_jacobi", "chebyshev")
+
+__all__ = [
+    "PALLAS_PRECONDS",
+    "PRECONDITIONERS",
+    "BlockJacobi",
+    "Chebyshev",
+    "PointJacobi",
+    "Preconditioner",
+    "SSOR",
+    "gershgorin_bounds",
+    "make_precond",
+    "precond_names",
+    "register_preconditioner",
+]

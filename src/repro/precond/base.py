@@ -1,0 +1,126 @@
+"""The preconditioner protocol + registry (the `repro.precond` subsystem).
+
+The paper's four methods are unpreconditioned; at production sizes their
+iteration counts grow with the grid and dominate every communication win.
+A preconditioner trades extra *local* work per iteration (and, for some,
+extra halo exchanges — but never extra global reductions) for fewer
+iterations, i.e. fewer all-reduces total.  That is exactly the axis the
+scaling model reasons about, so every implementation carries the metadata
+the model and the drivers need:
+
+  * ``extra_reductions_per_apply`` — global reductions the apply performs
+    (0 for all built-ins: being reduction-free is the design constraint,
+    following the two-stage-multisplitting idea that inner work must not
+    add barriers),
+  * ``matvecs_per_apply`` / ``halo_matvecs_per_apply`` — stencil applies
+    per ``M^{-1} r``, and how many of them need a halo exchange in the
+    distributed world (block-Jacobi: zero — its sweeps are shard-local),
+  * ``halo_hide`` — whether those exchanges can ride behind the interior
+    apply (``"interior"``, the PR-2 overlapped SpMV) or block like the
+    Gauss-Seidel sweeps (``"none"``),
+  * ``spd_preserving`` — whether ``M^{-1}`` keeps the preconditioned
+    operator SPD, i.e. whether ``pcg`` is applicable.
+
+Protocol: ``setup(A) -> state`` (traced once per solve, inside jit),
+``apply(state, A, r) -> z``; ``bind(A)`` packages both into the
+``z = M^{-1} r`` callable the solvers take.  ``A`` is any operator
+satisfying the ``LocalOp`` protocol (``matvec``, ``matvec_local``,
+``pad_exchange``, ``diag``, ``stencil``), so one implementation runs
+single-device and inside ``shard_map`` unchanged — the same
+write-once/parallelise-underneath rule the solvers follow.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+
+
+class Preconditioner:
+    """Base class; subclasses are registered in ``PRECONDITIONERS``."""
+
+    name: str = "?"
+    spd_preserving: bool = True
+    #: global reductions per apply (all built-ins: 0 — no new barriers)
+    extra_reductions_per_apply: int = 0
+    #: halo-exchange hide kind for the exchanges the apply does perform:
+    #: "interior" = rides behind the interior stencil apply (PR-2 overlap),
+    #: "none" = consumed immediately (the SSOR half-sweeps).
+    halo_hide: str = "interior"
+
+    # -- the protocol ---------------------------------------------------------
+    def setup(self, A) -> tuple:
+        """Build the per-solve state (traced; must be cheap and pure)."""
+        return ()
+
+    def apply(self, state, A, r: jax.Array) -> jax.Array:
+        """``z ~= A^{-1} r`` — one application of ``M^{-1}``."""
+        raise NotImplementedError
+
+    def bind(self, A) -> Callable[[jax.Array], jax.Array]:
+        """The ``z = M^{-1} r`` callable the solvers accept as ``M=``."""
+        state = self.setup(A)
+
+        def apply_M(r: jax.Array) -> jax.Array:
+            return self.apply(state, A, r)
+
+        return apply_M
+
+    # -- cost metadata (the scaling model's t_precond term) -------------------
+    @property
+    def matvecs_per_apply(self) -> int:
+        """Stencil applications per ``M^{-1} r`` (HBM traffic)."""
+        return 0
+
+    @property
+    def halo_matvecs_per_apply(self) -> int:
+        """...of which need a halo exchange in the distributed world."""
+        return 0
+
+    def touched_elements_per_apply(self, nbar: int) -> int:
+        """Per-row memory traffic of one apply, in the paper's §3.1 units
+        (each stencil apply streams n̄+2 elements per row; vector updates
+        add their operand count)."""
+        raise NotImplementedError
+
+    def describe(self) -> str:
+        return self.name
+
+
+#: name -> Preconditioner subclass; "none" is represented by Python None
+PRECONDITIONERS: dict[str, type] = {}
+
+
+def register_preconditioner(cls: type) -> type:
+    """Class decorator: add a Preconditioner implementation to the registry."""
+    if not issubclass(cls, Preconditioner):
+        raise TypeError(f"{cls!r} is not a Preconditioner subclass")
+    if cls.name in PRECONDITIONERS:
+        raise ValueError(f"preconditioner {cls.name!r} already registered")
+    PRECONDITIONERS[cls.name] = cls
+    return cls
+
+
+def precond_names() -> tuple[str, ...]:
+    """Accepted ``SolverOptions.precond`` values ("none" + the registry)."""
+    return ("none", *sorted(PRECONDITIONERS))
+
+
+def make_precond(name: str | None, **params) -> Preconditioner | None:
+    """Build a configured preconditioner; ``"none"``/``None`` -> ``None``.
+
+    ``params`` are the implementation's constructor knobs (``sweeps=``,
+    ``omega=``, ``degree=``, ``use_pallas=``, ...).
+    """
+    if name is None or name == "none":
+        if params:
+            raise ValueError(f"precond='none' takes no params, got {params}")
+        return None
+    try:
+        cls = PRECONDITIONERS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown preconditioner {name!r}; options: {precond_names()}"
+        ) from None
+    return cls(**params)

@@ -1,0 +1,111 @@
+"""Point-Jacobi and block-Jacobi preconditioners.
+
+``PointJacobi`` is the classical diagonal preconditioner extended to ``m``
+Jacobi sweeps on ``A z = r`` (the ``m``-term Neumann/Jacobi-smoothing
+polynomial).  NOTE on the HPCG operator: the matrix has a *constant*
+diagonal, so a single sweep (``sweeps=1``, pure ``z = D^{-1} r``) rescales
+the Krylov space uniformly and is a convergence no-op; the default two
+sweeps give the degree-1 polynomial ``M^{-1} = (2I - D^{-1}A) D^{-1}``,
+which genuinely clusters the spectrum.  Each extra sweep costs one full
+matvec (with halo exchange — the overlapped SpMV from PR 2 applies).
+
+``BlockJacobi`` is the two-stage-multisplitting idea (Brown et al.): the
+outer Krylov method sees a block-diagonal ``M`` whose blocks are each
+shard's *local* operator with zero halos, solved *incompletely* by a fixed
+number of damped Jacobi sweeps.  Zero communication: the sweeps use
+``A.matvec_local`` (no ppermutes), so the preconditioner adds no halo
+traffic and no reductions — it is free on the wire.  On one device the
+local block is the whole domain and block-Jacobi degenerates to Jacobi
+smoothing; distributed, the block structure (and hence the iterate) differs
+per decomposition, which is the accepted multisplitting trade.
+
+SPD: with the constant diagonal both are polynomials in (the local) SPD
+operator; positivity holds whenever ``omega * lambda_max(A) < 2 * diag``
+(true for both HPCG stencils at ``omega <= 1``) — odd sweep counts are
+unconditionally safe.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.precond.base import Preconditioner, register_preconditioner
+
+
+@register_preconditioner
+class PointJacobi(Preconditioner):
+    """``m``-sweep Jacobi: ``z_{k+1} = z_k + D^{-1}(r - A z_k)``, ``z_1 = D^{-1} r``."""
+
+    name = "jacobi"
+    spd_preserving = True
+
+    def __init__(self, sweeps: int = 2):
+        if sweeps < 1:
+            raise ValueError(f"sweeps must be >= 1, got {sweeps}")
+        self.sweeps = sweeps
+
+    def apply(self, state, A, r: jax.Array) -> jax.Array:
+        z = r / A.diag
+        for _ in range(self.sweeps - 1):
+            z = z + (r - A.matvec(z)) / A.diag
+        return z
+
+    @property
+    def matvecs_per_apply(self) -> int:
+        return self.sweeps - 1
+
+    @property
+    def halo_matvecs_per_apply(self) -> int:
+        return self.sweeps - 1          # every sweep's matvec is global
+
+    def touched_elements_per_apply(self, nbar: int) -> int:
+        # first sweep: read r, write z (2); each further sweep: one stencil
+        # apply (nbar+2) + read r,z / write z (3)
+        return 2 + (self.sweeps - 1) * (nbar + 2 + 3)
+
+    def describe(self) -> str:
+        return f"jacobi(sweeps={self.sweeps})"
+
+
+@register_preconditioner
+class BlockJacobi(Preconditioner):
+    """Per-shard incomplete solve: damped Jacobi sweeps with zero halos."""
+
+    name = "block_jacobi"
+    spd_preserving = True
+
+    def __init__(self, sweeps: int = 3, omega: float = 1.0,
+                 use_pallas: bool = False):
+        if sweeps < 1:
+            raise ValueError(f"sweeps must be >= 1, got {sweeps}")
+        if not 0.0 < omega <= 1.0:
+            raise ValueError(f"omega must be in (0, 1], got {omega}")
+        self.sweeps = sweeps
+        self.omega = omega
+        self.use_pallas = use_pallas
+
+    def apply(self, state, A, r: jax.Array) -> jax.Array:
+        z = self.omega * r / A.diag
+        for _ in range(self.sweeps - 1):
+            if self.use_pallas:
+                from repro.kernels import ops
+                z = ops.jacobi_sweep(jnp.pad(z, 1), r, A.stencil,
+                                     omega=self.omega)
+            else:
+                z = z + self.omega * (r - A.matvec_local(z)) / A.diag
+        return z
+
+    @property
+    def matvecs_per_apply(self) -> int:
+        return self.sweeps - 1
+
+    @property
+    def halo_matvecs_per_apply(self) -> int:
+        return 0                        # shard-local by construction
+
+    def touched_elements_per_apply(self, nbar: int) -> int:
+        return 2 + (self.sweeps - 1) * (nbar + 2 + 3)
+
+    def describe(self) -> str:
+        return f"block_jacobi(sweeps={self.sweeps}, omega={self.omega})"

@@ -197,6 +197,31 @@ def test_registry_subsumes_core_dicts():
         base in REGISTRY for base in base_variant)
 
 
+def test_registry_consistency_check_raises_real_exceptions():
+    """The import-time registry/core cross-check must raise (not assert:
+    asserts vanish under ``python -O``, silently disabling the guard)."""
+    import dataclasses
+    from repro.api import RegistryConsistencyError, check_consistent_with_core
+
+    check_consistent_with_core()                     # current state is good
+    missing = dict(REGISTRY)
+    missing.pop("cg")
+    with pytest.raises(RegistryConsistencyError, match="core-only"):
+        check_consistent_with_core(registry=missing)
+    wrong_fn = dict(REGISTRY)
+    wrong_fn["cg"] = dataclasses.replace(REGISTRY["cg"],
+                                         fn=lambda *a, **k: None)
+    with pytest.raises(RegistryConsistencyError, match="registered fn"):
+        check_consistent_with_core(registry=wrong_fn)
+    with pytest.raises(RegistryConsistencyError, match="variant_of"):
+        check_consistent_with_core(variant_of={"cg_nb": "bicgstab"})
+    # and the guard really is exception-based, not assert-based: it must
+    # keep firing when Python strips asserts (compile with optimize=2)
+    import inspect
+    src = inspect.getsource(check_consistent_with_core)
+    assert "assert " not in src
+
+
 def test_registry_barrier_metadata_matches_paper():
     """Hard-barrier counts per §3.1: CG 1, CG-NB 0, BiCGStab 2, B1 1."""
     assert REGISTRY["cg"].blocking_reductions == 1

@@ -34,7 +34,10 @@ def _init_state(method, A, b, x0):
     if method == "cg_nb":
         Ap = A.matvec(r)
         return (b, x0, r, r, Ap, rr, jnp.vdot(Ap, r))
-    if method == "bicgstab":
+    if method == "pcg":
+        # p slot = z0 (M=None => z = r); an slot = rz = rr
+        return (b, x0, r, r, r, rr, zero)
+    if method in ("bicgstab", "pbicgstab"):
         # Ap slot carries r-hat; an slot carries rho = rhat.r
         return (b, x0, r, r, r, jnp.vdot(r, r), zero)
     if method == "bicgstab_b1":
@@ -45,8 +48,8 @@ def _init_state(method, A, b, x0):
 
 
 #: which output slot carries the squared residual (the BiCGStab steps keep
-#: rho/alpha_n in slot 4 and ||r||^2 in slot 5)
-_RES_SLOT = {"bicgstab": 5, "bicgstab_b1": 5}
+#: rho/alpha_n in slot 4, pcg keeps rz there; ||r||^2 rides in slot 5)
+_RES_SLOT = {"bicgstab": 5, "bicgstab_b1": 5, "pcg": 5, "pbicgstab": 5}
 
 
 @pytest.mark.parametrize("method", sorted(REGISTRY))
