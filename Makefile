@@ -5,7 +5,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast verify smoke bench bench-precond examples
+.PHONY: test test-fast verify smoke bench bench-kernels bench-precond examples
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -29,6 +29,11 @@ bench:
 # reductions-vs-iterations trade-off; see docs/API.md §Preconditioning)
 bench-precond:
 	$(PYTHON) -m benchmarks.table_iterations --precond
+
+# per-iteration microbench of the Krylov iteration bodies (classic vs
+# merged vs pipelined vs fused kernels); writes BENCH_kernels.json
+bench-kernels:
+	$(PYTHON) -m benchmarks.bench_kernels
 
 examples:
 	$(PYTHON) examples/quickstart.py

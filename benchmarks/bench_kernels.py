@@ -1,0 +1,234 @@
+"""Per-iteration microbench of the Krylov iteration bodies (PR 4).
+
+Times N back-to-back iterations of each CG formulation on random state, at
+32³ and 64³ (f64, 27-pt — the paper's setting), and writes
+``BENCH_kernels.json`` at the repo root (the measured-perf trajectory the
+CI bench-smoke step uploads).  Variants:
+
+  * ``cg_classic_kernels`` — the classic iteration as SIX separately
+    dispatched kernels (SpMV, p·Ap, x-update, r-update, r·r, p-update),
+    driven by a host loop: the fork-join kernel-switch baseline, every
+    switch a dispatch + HBM round trip (the paper's §3.3 task-merging
+    target).
+  * ``cg_classic_jit`` / ``cg_merged_jit`` / ``cg_pipe_jit`` — N
+    iterations of the classic / merged / pipelined body inside ONE
+    compiled ``fori_loop`` (the regime the actual solvers run in; merged
+    and pipelined carry their extra recurrences, single stacked
+    reduction).
+  * ``fused_iteration``    — the merged iteration via the fused kernels:
+    ``fused_cg_body`` + ``spmv_dots`` Pallas passes on TPU (2 VMEM round
+    trips per iteration); their single-pass jnp references composed into
+    the same loop elsewhere (Pallas ``interpret`` mode is an emulator, not
+    a measurement — ``meta.fused_impl`` records which ran).  The
+    acceptance bar: beats ``cg_classic_kernels`` at 64³.
+
+Per-iteration time = min over repeats of (N-iteration wall clock)/N — the
+min (not median) because this measures the kernels, not container noise.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.bench_kernels            # full
+    PYTHONPATH=src python -m benchmarks.bench_kernels --smoke    # CI gate
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from benchmarks.common import csv
+from repro.core.operators import STENCILS
+from repro.core.problems import enable_f64
+from repro.core.solvers import _cg_merged_scalars
+from repro.kernels import ops, ref
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+GRIDS = ((32, 32, 32), (64, 64, 64))
+SMOKE_GRIDS = ((16, 16, 16),)
+
+
+def _state(shape, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 6)
+    return tuple(jax.random.normal(k, shape, dtype) for k in ks)
+
+
+def _runners(stencil, n_iters: int, state, use_pallas: bool):
+    """name -> zero-arg callable running ``n_iters`` iterations, blocked."""
+    mvp = stencil.matvec_padded
+    x, r, p, s, w, z = state
+    one = jnp.asarray(1.0, x.dtype)
+    inf = jnp.asarray(jnp.inf, x.dtype)
+    rr = jnp.vdot(r, r)
+    delta = jnp.vdot(w, r)
+
+    # -- classic CG, six separate kernel dispatches per iteration -------------
+    k_spmv = jax.jit(lambda v: mvp(jnp.pad(v, 1)))
+    k_dot = jax.jit(jnp.vdot)
+    k_axpy = jax.jit(lambda a, v, u: v + a * u)
+
+    def classic_kernels():
+        xc, rc, pc, rrc = x, r, p, rr
+        for _ in range(n_iters):
+            Ap = k_spmv(pc)
+            pAp = k_dot(pc, Ap)
+            alpha = rrc / pAp
+            xc = k_axpy(alpha, xc, pc)
+            rc = k_axpy(-alpha, rc, Ap)
+            rr_new = k_dot(rc, rc)
+            beta = rr_new / rrc
+            pc = k_axpy(beta, rc, pc)
+            rrc = rr_new
+        return jax.block_until_ready((xc, rc, pc, rrc))
+
+    # -- whole-loop compiled variants -----------------------------------------
+    def classic_body(_, c):
+        xc, rc, pc, rrc = c
+        Ap = mvp(jnp.pad(pc, 1))
+        alpha = rrc / jnp.vdot(pc, Ap)
+        xc = xc + alpha * pc
+        rc = rc - alpha * Ap
+        rr_new = jnp.vdot(rc, rc)
+        pc = rc + (rr_new / rrc) * pc
+        return (xc, rc, pc, rr_new)
+
+    def merged_body(_, c):
+        xc, rc, pc, sc, wc, gamma, dlt, gp, ap = c
+        alpha, beta = _cg_merged_scalars(gamma, dlt, gp, ap)
+        pc = rc + beta * pc
+        sc = wc + beta * sc
+        xc = xc + alpha * pc
+        rc = rc - alpha * sc
+        wc = mvp(jnp.pad(rc, 1))
+        return (xc, rc, pc, sc, wc, jnp.vdot(rc, rc), jnp.vdot(wc, rc),
+                gamma, alpha)
+
+    def pipe_body(_, c):
+        xc, rc, wc, pc, sc, zc, gp, ap = c
+        gamma, dlt = jnp.vdot(rc, rc), jnp.vdot(wc, rc)
+        n = lax.optimization_barrier(mvp(jnp.pad(wc, 1)))
+        alpha, beta = _cg_merged_scalars(gamma, dlt, gp, ap)
+        zc = n + beta * zc
+        sc = wc + beta * sc
+        pc = rc + beta * pc
+        xc = xc + alpha * pc
+        rc = rc - alpha * sc
+        wc = wc - alpha * zc
+        return (xc, rc, wc, pc, sc, zc, gamma, alpha)
+
+    def fused_body(_, c):
+        xc, rc, pc, sc, wc, gamma, dlt, gp, ap = c
+        alpha, beta = _cg_merged_scalars(gamma, dlt, gp, ap)
+        if use_pallas:
+            xc, rc, pc, sc = ops.cg_body(alpha, beta, xc, rc, pc, sc, wc)
+            wc, dlt_new, gamma_new = ops.spmv_dots(jnp.pad(rc, 1), stencil)
+        else:
+            xc, rc, pc, sc = ref.fused_cg_body_ref(alpha, beta, xc, rc, pc,
+                                                   sc, wc)
+            wc = mvp(jnp.pad(rc, 1))
+            # == stencil_spmv_dots_ref with the centre slice elided (the
+            # centre of pad(r) IS r); XLA fuses the dots into the pass
+            dlt_new, gamma_new = jnp.vdot(wc, rc), jnp.vdot(rc, rc)
+        return (xc, rc, pc, sc, wc, gamma_new, dlt_new, gamma, alpha)
+
+    inits = {
+        "cg_classic_jit": ((x, r, p, rr), classic_body),
+        "cg_merged_jit": ((x, r, p, s, w, rr, delta, inf, one), merged_body),
+        "cg_pipe_jit": ((x, r, w, p, s, z, inf, one), pipe_body),
+        "fused_iteration": ((x, r, p, s, w, rr, delta, inf, one), fused_body),
+    }
+    runners = {"cg_classic_kernels": classic_kernels}
+    for name, (init, body) in inits.items():
+        loop = jax.jit(lambda init, body=body: lax.fori_loop(
+            0, n_iters, body, init))
+        runners[name] = (lambda loop=loop, init=init:
+                         jax.block_until_ready(loop(init)))
+    return runners
+
+
+def bench_grid(shape, stencil, *, use_pallas: bool, n_iters: int,
+               repeats: int) -> dict:
+    state = _state(shape, jnp.float64)
+    out = {}
+    for name, run in _runners(stencil, n_iters, state, use_pallas).items():
+        run()                                   # warm-up / compile
+        ts = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            run()
+            ts.append(time.perf_counter() - t0)
+        out[name] = min(ts) / n_iters
+    out["fused_vs_classic_kernels"] = (
+        out["cg_classic_kernels"] / out["fused_iteration"])
+    return out
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid + few repeats (the CI regression gate)")
+    ap.add_argument("--stencil", default="27pt", choices=["7pt", "27pt"])
+    ap.add_argument("--iters", type=int, default=None,
+                    help="iterations per timed run (amortises dispatch "
+                         "noise; default 50, smoke 5)")
+    ap.add_argument("--repeats", type=int, default=None)
+    ap.add_argument("--pallas", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="back the fused iteration with the Pallas kernels "
+                         "(default: only on a real TPU — interpret mode is "
+                         "an emulator, not a measurement)")
+    ap.add_argument("--out", default=os.path.join(ROOT, "BENCH_kernels.json"))
+    args = ap.parse_args(argv)
+
+    enable_f64()
+    use_pallas = (jax.default_backend() == "tpu" if args.pallas is None
+                  else args.pallas)
+    n_iters = args.iters or (5 if args.smoke else 50)
+    repeats = args.repeats or (2 if args.smoke else 5)
+    grids = SMOKE_GRIDS if args.smoke else GRIDS
+    stencil = STENCILS[args.stencil]
+
+    record = {
+        "meta": {
+            "backend": jax.default_backend(),
+            "fused_impl": "pallas" if use_pallas else "jnp-ref single-pass",
+            "dtype": "float64",
+            "stencil": args.stencil,
+            "iters_per_run": n_iters,
+            "repeats": repeats,
+            "smoke": bool(args.smoke),
+        },
+        "grids": {},
+    }
+    for shape in grids:
+        key = "x".join(map(str, shape))
+        res = record["grids"][key] = bench_grid(
+            shape, stencil, use_pallas=use_pallas, n_iters=n_iters,
+            repeats=repeats)
+        for name, val in res.items():
+            if name != "fused_vs_classic_kernels":
+                csv(f"bench_kernels_{key}_{name}", val * 1e6,
+                    f"per_iter_us={val * 1e6:.1f}")
+        csv(f"bench_kernels_{key}_fused_speedup", 0.0,
+            f"fused_vs_classic_kernels={res['fused_vs_classic_kernels']:.2f}x")
+    with open(args.out, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"[bench_kernels] wrote {args.out}")
+    # the regression gate: fusion losing to the fork-join kernel baseline
+    # means a kernel (or its dispatch structure) regressed — fail loudly.
+    bad = {k: g["fused_vs_classic_kernels"] for k, g in record["grids"].items()
+           if g["fused_vs_classic_kernels"] < 1.0}
+    if bad:
+        raise SystemExit(f"[bench_kernels] fused iteration slower than the "
+                         f"unfused classic: {bad}")
+    return record
+
+
+if __name__ == "__main__":
+    main()

@@ -25,7 +25,14 @@ container is CPU-only — DESIGN.md §7).  Model per iteration and device:
               application context, §4.2),
   * hide_r  — the overlap window of reduction r (0 for blocking reductions;
               the SpMV or vector-update time for reductions the variant
-              overlaps, per §3.1's own overlap condition).
+              overlaps, per §3.1's own overlap condition; the SpMV + M-apply
+              for the "pipe" kind — the pipelined variants' single stacked
+              reduction rides behind the body's SpMV, see ``t_reduce``).
+
+The merged variants (cg_merged & co., reduce_hide="merged") pay Λ(n) ONCE
+per iteration instead of 2–3 times; the pipelined ones (cg_pipe/pcg_pipe)
+additionally hide that one payment behind the SpMV — their curves in
+fig3/fig56 are flat in Λ until Λ(n) exceeds a whole SpMV.
 
 Validated against the dry-run solver cells at 256/512 chips (roofline.py
 cross-checks hlo_bytes against this T_mem within the f32-legalisation factor).
@@ -97,9 +104,7 @@ def iteration_time(method: str, nbar: int, local_grid: tuple[int, int, int],
     """
     r = local_grid[0] * local_grid[1] * local_grid[2]
     m = METHODS[method]
-    touched = touched_elements_per_iter(
-        method if method in ("cg", "cg_nb", "bicgstab", "bicgstab_b1")
-        else method, nbar)
+    touched = touched_elements_per_iter(method, nbar)
     t_mem = touched * r * dtype_bytes / HBM_BW
     t_vec = 3 * r * dtype_bytes / HBM_BW          # one z = ax+by update
     t_spmv = (nbar + 2) * r * dtype_bytes / HBM_BW
@@ -119,31 +124,60 @@ def iteration_time(method: str, nbar: int, local_grid: tuple[int, int, int],
             t_halo += max(0.0, t_halo_spmv - t_spmv)
         else:
             t_halo += t_halo_spmv
-    # preconditioner applies (pcg: 1, pbicgstab: 2, else 0)
-    t_pre = 0.0
+    # preconditioner applies (pcg family: 1, pbicgstab family: 2, else 0)
+    t_pre_apply = 0.0
     if precond not in (None, "none") and m.precond_applies:
         from repro.precond import make_precond
         inst = make_precond(precond, **(precond_params or {}))
-        t_pre = inst.touched_elements_per_apply(nbar) * r * dtype_bytes / HBM_BW
+        t_pre_apply = (inst.touched_elements_per_apply(nbar) * r * dtype_bytes
+                       / HBM_BW)
         for _ in range(inst.halo_matvecs_per_apply):
             if (halo_mode == "overlap" and execution == "dataflow"
                     and inst.halo_hide == "interior"):
-                t_pre += max(0.0, t_halo_spmv - t_spmv)
+                t_pre_apply += max(0.0, t_halo_spmv - t_spmv)
             else:
-                t_pre += t_halo_spmv
-        t_pre *= m.precond_applies
-    # reductions
-    t_red = 0.0
-    if chips > 1:
-        stages = math.ceil(math.log2(chips))
-        lat = ALLREDUCE_LAT * stages * (1 + NOISE[noise] * stages)
-        for (kind,) in m.reductions:
-            if execution == "mpi":
-                hide = 0.0
-            else:
-                hide = {"none": 0.0, "vec": t_vec, "spmv": t_spmv}[kind]
-            t_red += max(0.0, lat - hide)
+                t_pre_apply += t_halo_spmv
+    t_pre = t_pre_apply * m.precond_applies
+    # reductions — the t_reduce hide term: per reduction, the all-reduce
+    # latency Λ(n) minus the variant's overlap window.  "pipe" is the
+    # Ghysels–Vanroose window: the pipelined stacked psum rides behind the
+    # body's SpMV plus (for pcg_pipe) the preconditioner apply it also
+    # overlaps — structurally the same trick halo_mode="overlap" plays for
+    # the ppermutes, applied to the global reduction.
+    t_red = t_reduce(m, chips, noise=noise, execution=execution,
+                     t_vec=t_vec, t_spmv=t_spmv, t_pre_apply=t_pre_apply)
     return t_mem + t_halo + t_pre + t_red
+
+
+def reduction_latency(chips: int, *, noise: str = "tpu") -> float:
+    """Λ(n): modelled all-reduce latency at ``chips`` devices."""
+    if chips <= 1:
+        return 0.0
+    stages = math.ceil(math.log2(chips))
+    return ALLREDUCE_LAT * stages * (1 + NOISE[noise] * stages)
+
+
+def t_reduce(m: MethodModel, chips: int, *, noise: str, execution: str,
+             t_vec: float, t_spmv: float, t_pre_apply: float = 0.0) -> float:
+    """The per-iteration reduction term: Σ_r max(0, Λ(n) − hide_r).
+
+    Hide windows per kind: "none" 0, "vec" one vector update, "spmv" the
+    SpMV, "pipe" the SpMV + preconditioner apply the pipelined stacked
+    reduction overlaps.  Under ``execution="mpi"`` every reduction blocks
+    (the paper's fork-join baseline).
+    """
+    if chips <= 1:
+        return 0.0
+    lat = reduction_latency(chips, noise=noise)
+    total = 0.0
+    for (kind,) in m.reductions:
+        if execution == "mpi":
+            hide = 0.0
+        else:
+            hide = {"none": 0.0, "vec": t_vec, "spmv": t_spmv,
+                    "pipe": t_spmv + t_pre_apply}[kind]
+        total += max(0.0, lat - hide)
+    return total
 
 
 def weak_efficiency(method: str, nbar: int, chips: int,

@@ -41,8 +41,13 @@ if __name__ == "__main__":
     sys.path.insert(0, os.path.join(root, "src"))
     from benchmarks.scaling_model import weak_efficiency
 
-    print("\nTPU-projected weak-scaling efficiency (27pt, 128^3/chip):")
-    print("chips :  " + "  ".join(f"{n:>6d}" for n in (8, 64, 512, 4096)))
-    for m in ("cg", "cg_nb"):
-        effs = [weak_efficiency(m, 27, n) for n in (8, 64, 512, 4096)]
-        print(f"{m:6s}:  " + "  ".join(f"{e:6.3f}" for e in effs))
+    print("\nTPU-projected weak-scaling efficiency (27pt, 128^3/chip, "
+          "noisy-fabric regime):")
+    print("chips     :  " + "  ".join(f"{n:>6d}" for n in (8, 64, 512, 4096)))
+    # cg_merged pays the all-reduce latency ONCE per iteration, cg_pipe
+    # additionally hides it behind the SpMV (PR 4, docs/API.md
+    # §Reduction-hiding variants)
+    for m in ("cg", "cg_nb", "cg_merged", "cg_pipe"):
+        effs = [weak_efficiency(m, 27, n, noise="noisy")
+                for n in (8, 64, 512, 4096)]
+        print(f"{m:10s}:  " + "  ".join(f"{e:6.3f}" for e in effs))

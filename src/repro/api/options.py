@@ -69,6 +69,16 @@ class SolverOptions:
                   ``{"omega": 1.2}``, ...); ``options.pallas`` flows into
                   the preconditioners that have fused Pallas kernels
                   unless ``use_pallas`` is pinned here.
+    donate:       donate the ``x0`` buffer of ``solve``/``solve_batched``
+                  to the compiled call (``jax.jit`` ``donate_argnums``), so
+                  the x/r/p iterate buffers reuse it instead of allocating
+                  a fresh output each solve — the serving hot path.
+                  Caveat: donation is live on EVERY backend (CPU included):
+                  a caller-supplied ``x0`` array is INVALIDATED by the call
+                  (reusing it raises a deleted-buffer error); pass
+                  ``donate=False`` to keep reusing your own ``x0`` buffer.
+                  The ``timed_*`` paths always compile an undonated variant
+                  (they re-call with the same buffers).
     """
 
     tol: float = 1e-6
@@ -83,6 +93,7 @@ class SolverOptions:
     dims_map: dict[str, str | None] | None = None
     precond: str = "none"
     precond_params: dict | None = None
+    donate: bool = True
 
     def __post_init__(self):
         if self.precond not in precond_names():

@@ -19,8 +19,20 @@ from repro.core import solvers as _solvers
 
 #: how a reduction's latency is hidden (the scaling model's terms):
 #: "none" = blocking barrier, "vec" = overlapped with one vector update,
-#: "spmv" = overlapped with the SpMV.
+#: "spmv" = overlapped with the SpMV, "pipe" = a pipelined stacked
+#: reduction overlapped with the NEXT SpMV (+ preconditioner apply) —
+#: the Ghysels–Vanroose window, priced by scaling_model's t_reduce term.
 HideKind = str
+
+#: accepted ``SolverSpec.reduce_hide`` values — the variant's reduction
+#: *scheduling strategy* (orthogonal to the per-reduction hide kinds):
+#: "none"      = one psum per dot product (the classics + the paper's
+#:               nonblocking variants),
+#: "merged"    = every dot of the iteration stacked into ONE psum
+#:               (Chronopoulos–Gear CG, single-reduction BiCGStab),
+#: "pipelined" = the ONE stacked psum additionally overlapped with the
+#:               body's SpMV (Ghysels–Vanroose).
+REDUCE_HIDES = ("none", "merged", "pipelined")
 
 #: how a SpMV's halo exchange hides (one entry per SpMV per iteration):
 #: "interior" = the ppermutes ride behind the interior stencil apply
@@ -43,6 +55,7 @@ class SolverSpec:
     stationary: bool = False          # Jacobi/GS family (vs Krylov)
     accepts_precond: bool = False     # fn takes M= (repro.precond apply)
     precond_applies_per_iter: int = 0  # M^{-1} applications per iteration
+    reduce_hide: str = "none"         # reduction scheduling (REDUCE_HIDES)
     description: str = ""
 
     def __post_init__(self):
@@ -57,6 +70,20 @@ class SolverSpec:
             raise ValueError(
                 f"{self.name!r}: precond_applies_per_iter without "
                 f"accepts_precond")
+        if self.reduce_hide not in REDUCE_HIDES:
+            raise ValueError(
+                f"{self.name!r}: unknown reduce_hide {self.reduce_hide!r}; "
+                f"options: {REDUCE_HIDES}")
+        if self.reduce_hide != "none" and len(self.reduction_hides) != 1:
+            raise ValueError(
+                f"{self.name!r}: reduce_hide={self.reduce_hide!r} means ONE "
+                f"stacked reduction per iteration, but reduction_hides has "
+                f"{len(self.reduction_hides)} entries")
+        if self.reduce_hide == "pipelined" and self.reduction_hides != ("pipe",):
+            raise ValueError(
+                f"{self.name!r}: a pipelined variant's single reduction "
+                f"hides behind the next SpMV — reduction_hides must be "
+                f"('pipe',)")
 
     @property
     def reductions_per_iter(self) -> int:
@@ -167,6 +194,56 @@ register_solver(SolverSpec(
     variant_of="bicgstab",
     accepts_precond=True, precond_applies_per_iter=2,
     description="right-preconditioned BiCGStab (true-residual stopping)"))
+
+
+# --- PR 4: reduction-hiding variants (merged + pipelined) --------------------
+# One stacked psum per iteration; "merged" pays it as a single blocking
+# barrier, "pipelined" hides it behind the body's SpMV ("pipe" hide kind).
+# tests/test_hlo_analysis.py asserts the one-all-reduce claim on compiled
+# shard_map iteration bodies.
+
+register_solver(SolverSpec(
+    name="cg_merged", fn=_solvers.cg_merged,
+    reduction_hides=("none",), spmvs_per_iter=1, spd_required=True,
+    variant_of="cg", reduce_hide="merged",
+    description="Chronopoulos–Gear CG: all dots in ONE stacked psum "
+                "(Saad recurrence for p·Ap)"))
+
+register_solver(SolverSpec(
+    name="cg_pipe", fn=_solvers.cg_pipe,
+    reduction_hides=("pipe",), spmvs_per_iter=1, spd_required=True,
+    variant_of="cg", reduce_hide="pipelined",
+    description="Ghysels–Vanroose pipelined CG: the ONE stacked psum "
+                "overlaps the SpMV"))
+
+register_solver(SolverSpec(
+    name="pcg_merged", fn=_solvers.pcg_merged,
+    reduction_hides=("none",), spmvs_per_iter=1, spd_required=True,
+    variant_of="pcg", reduce_hide="merged",
+    accepts_precond=True, precond_applies_per_iter=1,
+    description="merged-reduction PCG (Chronopoulos–Gear with M)"))
+
+register_solver(SolverSpec(
+    name="pcg_pipe", fn=_solvers.pcg_pipe,
+    reduction_hides=("pipe",), spmvs_per_iter=1, spd_required=True,
+    variant_of="pcg", reduce_hide="pipelined",
+    accepts_precond=True, precond_applies_per_iter=1,
+    description="pipelined PCG: the stacked psum overlaps M-apply + SpMV"))
+
+register_solver(SolverSpec(
+    name="bicgstab_merged", fn=_solvers.bicgstab_merged,
+    reduction_hides=("none",), spmvs_per_iter=2,
+    variant_of="bicgstab", reduce_hide="merged",
+    description="single-reduction BiCGStab: nine dots, ONE stacked psum "
+                "(Cools–Vanroose recurrences)"))
+
+register_solver(SolverSpec(
+    name="pbicgstab_merged", fn=_solvers.pbicgstab_merged,
+    reduction_hides=("none",), spmvs_per_iter=2,
+    variant_of="pbicgstab", reduce_hide="merged",
+    accepts_precond=True, precond_applies_per_iter=2,
+    description="right-preconditioned single-reduction BiCGStab "
+                "(merged core on A∘M⁻¹, true-residual stopping)"))
 
 
 class RegistryConsistencyError(RuntimeError):

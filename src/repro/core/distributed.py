@@ -33,7 +33,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core.compat import shard_map
 from repro.core.operators import Stencil, interior_matvec, shell_assemble
 from repro.core.problems import HPCGProblem
-from repro.core.solvers import SOLVERS, SolveResult
+from repro.core.solvers import SOLVERS, SolveResult, _cg_merged_scalars
 
 #: halo-exchange strategies of the distributed operator ("auto" resolves to
 #: "concat" here; repro.api.backend upgrades it to "overlap" where safe)
@@ -219,13 +219,21 @@ class DistributedOp:
         # exactly like one MPI_Allreduce over the world communicator.
         return lax.psum(jnp.vdot(a, b), self.layout.reduce_axes)
 
+    def dotn(self, *pairs) -> tuple:
+        """Any number of dot products in ONE collective: stack the local
+        partials, single psum, unstack.  The merged/pipelined Krylov
+        variants ride their entire per-iteration scalar traffic (2, 3 or 9
+        dots) through this — one all-reduce per iteration, verified on the
+        compiled HLO by tests/test_hlo_analysis.py."""
+        stacked = lax.psum(
+            jnp.stack([jnp.vdot(a, b) for a, b in pairs]),
+            self.layout.reduce_axes)
+        return tuple(stacked[i] for i in range(len(pairs)))
+
     def dot2(self, a, b, c, d):
         """Two dot products in ONE collective (the paper fuses scalar pairs
-        into a single MPI_Allreduce; here: stack partials, single psum)."""
-        pair = lax.psum(
-            jnp.stack([jnp.vdot(a, b), jnp.vdot(c, d)]), self.layout.reduce_axes
-        )
-        return pair[0], pair[1]
+        into a single MPI_Allreduce)."""
+        return self.dotn((a, b), (c, d))
 
 def make_layout(mesh: Mesh, dims_map: dict[str, str | None] | None = None) -> GridLayout:
     """Default layouts per mesh:
@@ -291,6 +299,88 @@ def solve_shardmap(
     return fn, layout
 
 
+#: per-method step-state layout for ``solve_step_shardmap``: (vector slot
+#: names, scalar slot names), EXCLUDING the leading ``b``.  The paper's
+#: methods share the historical (x, r, p, Ap) × (an, ad) layout (slots are
+#: reused — e.g. the BiCGStab steps carry r-hat in the Ap slot); the
+#: reduction-hiding variants carry their full recurrence state, which no
+#: longer fits four vectors.  Drivers that lower a step generically
+#: (launch/dryrun, tests) build their argument lists from this table.
+_LEGACY_STEP_STATE = (("x", "r", "p", "Ap"), ("an", "ad"))
+STEP_STATE: dict[str, tuple[tuple[str, ...], tuple[str, ...]]] = {
+    "cg_merged": (("x", "r", "p", "s", "w"),
+                  ("gamma", "delta", "gamma_prev", "alpha_prev")),
+    "pcg_merged": (("x", "r", "u", "p", "s", "w"),
+                   ("gamma", "delta", "rr", "gamma_prev", "alpha_prev")),
+    "cg_pipe": (("x", "r", "w", "p", "s", "z"),
+                ("gamma_prev", "alpha_prev", "rr")),
+    "pcg_pipe": (("x", "r", "u", "w", "p", "s", "q", "z"),
+                 ("gamma_prev", "alpha_prev", "rr")),
+    "bicgstab_merged": (("x", "r", "w", "t", "p", "s", "z", "rhat"),
+                        ("rho", "alpha", "rr")),
+    "pbicgstab_merged": (("x", "r", "w", "t", "p", "s", "z", "rhat"),
+                         ("rho", "alpha", "rr")),
+}
+
+
+def step_state_layout(method: str) -> tuple[tuple[str, ...], tuple[str, ...]]:
+    """(vector slot names, scalar slot names) of a method's step state."""
+    return STEP_STATE.get(method, _LEGACY_STEP_STATE)
+
+
+def init_step_state(method: str, A, b, x0, M=None) -> tuple:
+    """The full argument tuple ``(b, *vectors, *scalars)`` feeding one
+    ``solve_step_shardmap`` iteration, matching the solver's loop carry at
+    iteration 0 (so one step == one ``lax.while_loop`` body —
+    tests/test_step_parity.py).  ``A`` is any LocalOp-protocol operator;
+    ``M`` the bound preconditioner apply for the methods that take one.
+    """
+    apply_M = M if M is not None else (lambda v: v)
+    r = b - A.matvec(x0)
+    rr = jnp.vdot(r, r)
+    zero_v = jnp.zeros_like(b)
+    zero = jnp.zeros((), b.dtype)
+    inf = jnp.asarray(jnp.inf, b.dtype)
+    one = jnp.asarray(1.0, b.dtype)
+    if method == "cg_merged":
+        w = A.matvec(r)
+        return (b, x0, r, zero_v, zero_v, w,
+                rr, jnp.vdot(w, r), inf, one)
+    if method == "pcg_merged":
+        u = apply_M(r)
+        w = A.matvec(u)
+        return (b, x0, r, u, zero_v, zero_v, w,
+                jnp.vdot(r, u), jnp.vdot(w, u), rr, inf, one)
+    if method == "cg_pipe":
+        w = A.matvec(r)
+        return (b, x0, r, w, zero_v, zero_v, zero_v, inf, one, rr)
+    if method == "pcg_pipe":
+        u = apply_M(r)
+        w = A.matvec(u)
+        return (b, x0, r, u, w, zero_v, zero_v, zero_v, zero_v,
+                inf, one, rr)
+    if method in ("bicgstab_merged", "pbicgstab_merged"):
+        mv = (A.matvec if method == "bicgstab_merged"
+              else (lambda v: A.matvec(apply_M(v))))
+        y0 = x0 if method == "bicgstab_merged" else zero_v
+        w = mv(r)
+        t = mv(w)
+        rho = jnp.vdot(r, r)               # r̂ = r0
+        alpha = rho / jnp.vdot(r, w)
+        return (b, y0, r, w, t, r, w, t, r, rho, alpha, rho)
+    # --- legacy (x, r, p, Ap) × (an, ad) layout ------------------------------
+    if method == "cg_nb":
+        Ap = A.matvec(r)
+        return (b, x0, r, r, Ap, rr, jnp.vdot(Ap, r))
+    if method == "bicgstab_b1":
+        rhat = r / jnp.sqrt(rr)
+        return (b, x0, r, r, rhat, jnp.vdot(r, rhat), zero)
+    # cg / pcg (p slot = z0; with M=None: z == r, rz == rr), the BiCGStab
+    # pair (Ap slot = r-hat, an slot = rho) and the stationary methods all
+    # start from the same (r, r, r, rr) filling.
+    return (b, x0, r, r, r, rr, zero)
+
+
 def solve_step_shardmap(
     problem: HPCGProblem,
     method: str,
@@ -305,14 +395,99 @@ def solve_step_shardmap(
 
     Used by the dry-run/roofline: lowering a single iteration makes
     ``cost_analysis`` exact (no while-loop trip-count ambiguity) and exposes
-    the per-iteration collective schedule for the overlap analysis.
+    the per-iteration collective schedule for the overlap analysis.  The
+    state signature is ``(b, *vectors, *scalars)`` per
+    :func:`step_state_layout` (method-dependent for the reduction-hiding
+    variants); :func:`init_step_state` builds a matching initial tuple.
     """
     layout = make_layout(mesh, dims_map)
     stencil = problem.stencil
+    vec_names, scal_names = step_state_layout(method)
 
-    def local_step(b_loc, x_loc, r_loc, p_loc, Ap_loc, an, ad):
+    def local_step_generic(b_loc, *state):
         op = DistributedOp(stencil, layout, matvec_padded=matvec_padded,
                            halo_mode=halo_mode)
+        M = precond.bind(op) if precond is not None else (lambda v: v)
+        if method == "cg_merged":
+            x, r, p, s, w, gamma, delta, gamma_prev, alpha_prev = state
+            alpha, beta = _cg_merged_scalars(gamma, delta, gamma_prev,
+                                             alpha_prev)
+            p = r + beta * p
+            s = w + beta * s
+            x = x + alpha * p
+            r = r - alpha * s
+            w = op.matvec(r)
+            gamma_new, delta_new = op.dotn((r, r), (w, r))  # ONE all-reduce
+            return (x, r, p, s, w, gamma_new, delta_new, gamma, alpha)
+        elif method == "pcg_merged":
+            (x, r, u, p, s, w, gamma, delta, rr,
+             gamma_prev, alpha_prev) = state
+            alpha, beta = _cg_merged_scalars(gamma, delta, gamma_prev,
+                                             alpha_prev)
+            p = u + beta * p
+            s = w + beta * s
+            x = x + alpha * p
+            r = r - alpha * s
+            u = M(r)
+            w = op.matvec(u)
+            gamma_new, delta_new, rr_new = op.dotn((r, u), (w, u), (r, r))
+            return (x, r, u, p, s, w, gamma_new, delta_new, rr_new,
+                    gamma, alpha)
+        elif method == "cg_pipe":
+            x, r, w, p, s, z, gamma_prev, alpha_prev, rr = state
+            gamma, delta = op.dotn((r, r), (w, r))        # issued...
+            n = lax.optimization_barrier(op.matvec(w))    # ...hidden here
+            alpha, beta = _cg_merged_scalars(gamma, delta, gamma_prev,
+                                             alpha_prev)
+            z = n + beta * z
+            s = w + beta * s
+            p = r + beta * p
+            x = x + alpha * p
+            r = r - alpha * s
+            w = w - alpha * z
+            return (x, r, w, p, s, z, gamma, alpha, gamma)
+        elif method == "pcg_pipe":
+            x, r, u, w, p, s, q, z, gamma_prev, alpha_prev, rr = state
+            gamma, delta, rr_new = op.dotn((r, u), (w, u), (r, r))
+            m = M(w)
+            n = lax.optimization_barrier(op.matvec(m))
+            alpha, beta = _cg_merged_scalars(gamma, delta, gamma_prev,
+                                             alpha_prev)
+            z = n + beta * z
+            q = m + beta * q
+            s = w + beta * s
+            p = u + beta * p
+            x = x + alpha * p
+            r = r - alpha * s
+            u = u - alpha * q
+            w = w - alpha * z
+            return (x, r, u, w, p, s, q, z, gamma, alpha, rr_new)
+        elif method in ("bicgstab_merged", "pbicgstab_merged"):
+            mv = (op.matvec if method == "bicgstab_merged"
+                  else (lambda v: op.matvec(M(v))))
+            y, r, w, t, p, s, z, rhat, rho, alpha, rr = state
+            q = r - alpha * s
+            yv = w - alpha * z
+            v = lax.optimization_barrier(mv(z))
+            (qy, yy, qq, rhq, rhy, rht, rhv, rhz, rhs) = op.dotn(
+                (q, yv), (yv, yv), (q, q), (rhat, q), (rhat, yv),
+                (rhat, t), (rhat, v), (rhat, z), (rhat, s))
+            omega = qy / yy
+            y = y + alpha * p + omega * q
+            r = q - omega * yv
+            rr_new = jnp.maximum(
+                qq - 2.0 * omega * qy + omega * omega * yy, 0.0)
+            rho_new = rhq - omega * rhy
+            beta = (rho_new / rho) * (alpha / omega)
+            w = yv - omega * (t - alpha * v)
+            t = mv(w)
+            rhw = rhy - omega * (rht - alpha * rhv)
+            alpha_new = rho_new / (rhw + beta * (rhs - omega * rhz))
+            p = r + beta * (p - omega * s)
+            s = w + beta * (s - omega * z)
+            z = t + beta * (z - omega * v)
+            return (y, r, w, t, p, s, z, rhat, rho_new, alpha_new, rr_new)
+        x_loc, r_loc, p_loc, Ap_loc, an, ad = state
         if method == "cg":
             Ap = op.matvec(p_loc)
             pAp = op.dot(p_loc, Ap)
@@ -342,7 +517,6 @@ def solve_step_shardmap(
         elif method == "pcg":
             # p slot = p, Ap slot carries z; an slot = rz (with M=None the
             # state degenerates to cg's: z == r, rz == rr)
-            M = precond.bind(op) if precond is not None else (lambda v: v)
             Ap = op.matvec(p_loc)
             pAp = op.dot(p_loc, Ap)         # blocking
             alpha = an / pAp
@@ -372,7 +546,6 @@ def solve_step_shardmap(
             return x, r, p, rhat, rho_new, rr
         elif method == "pbicgstab":
             # right-preconditioned BiCGStab; Ap slot carries r-hat
-            M = precond.bind(op) if precond is not None else (lambda v: v)
             rhat = Ap_loc
             phat = M(p_loc)
             v = op.matvec(phat)
@@ -429,9 +602,9 @@ def solve_step_shardmap(
 
     spec = layout.spec()
     fn = shard_map(
-        local_step,
+        local_step_generic,
         mesh=mesh,
-        in_specs=(spec, spec, spec, spec, spec, P(), P()),
-        out_specs=(spec, spec, spec, spec, P(), P()),
+        in_specs=(spec,) + (spec,) * len(vec_names) + (P(),) * len(scal_names),
+        out_specs=(spec,) * len(vec_names) + (P(),) * len(scal_names),
     )
     return fn, layout

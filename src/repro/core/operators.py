@@ -299,6 +299,18 @@ def touched_elements_per_iter(method: str, nbar: int) -> int:
         # touched_elements_per_apply × SolverSpec.precond_applies_per_iter)
         "pcg": 16 + nbar,
         "pbicgstab": 27 + 2 * nbar,
+        # reduction-hiding variants (PR 4), same accounting (3 per
+        # two-operand vector update, dot reads folded in like cg's 12):
+        # merged CG adds the s = A p recurrence (+3 over cg); pipelined CG
+        # adds z and the w recurrence on top (+6 over merged); the
+        # preconditioned forms add the u/q image traffic like pcg does;
+        # merged BiCGStab streams 8 recurrence updates + 9 fused dots.
+        "cg_merged": 15 + nbar,
+        "cg_pipe": 21 + nbar,
+        "pcg_merged": 19 + nbar,
+        "pcg_pipe": 28 + nbar,
+        "bicgstab_merged": 33 + 2 * nbar,
+        "pbicgstab_merged": 33 + 2 * nbar,
         "jacobi": 4 + nbar,
         "gauss_seidel": 6 + 2 * nbar,
         # red-black symmetric GS: 4 coloured half-sweeps + residual, each

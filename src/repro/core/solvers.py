@@ -41,6 +41,50 @@ plus one extra hook — ``M``, the bound ``z = M^{-1} r`` apply built by
 ``M=None`` they reduce arithmetically to ``cg`` / ``bicgstab``; convergence
 is always judged on the TRUE residual so iteration counts stay comparable
 across preconditioners.
+
+Beyond the paper (PR 4) — reduction-hiding variants.  The paper's Alg. 1/2
+move reductions *off the critical path* but keep one ``psum`` per dot
+product; at scale the per-collective latency itself dominates.  Two further
+restructurings (both classical, see Chronopoulos & Gear 1989, Ghysels &
+Vanroose 2014, Cools & Vanroose 2017):
+
+  * ``cg_merged`` / ``pcg_merged``       — Chronopoulos–Gear CG: the SpMV is
+                        applied to ``r`` (``w = A r``) and ``p·Ap`` is
+                        recovered from the Saad recurrence
+                        ``α = γ/(δ − βγ/α_prev)`` with ``γ = r·u``,
+                        ``δ = w·u``, so ALL dot products of an iteration
+                        stack into ONE ``psum``.
+  * ``bicgstab_merged`` / ``pbicgstab_merged`` — single-reduction BiCGStab:
+                        auxiliary recurrences for ``s = A p``, ``z = A s``,
+                        ``w = A r``, ``t = A w`` let every scalar an
+                        iteration needs (ω's pair, ρ, ‖r‖² and the α
+                        denominator) be formed from NINE dots on vectors
+                        already available *before* ω — one stacked ``psum``
+                        per iteration (cf. Cools–Vanroose p-BiCGStab).
+                        ``pbicgstab_merged`` runs the same core on the
+                        right-preconditioned operator ``B = A∘M⁻¹`` with a
+                        zero initial guess and recovers ``x = x0 + M⁻¹ y``
+                        once at the end (the residual is unchanged by right
+                        preconditioning, so stopping stays TRUE-residual).
+  * ``cg_pipe`` / ``pcg_pipe``           — Ghysels–Vanroose pipelined CG:
+                        the merged reduction is issued at the TOP of the
+                        body and the SpMV of the same body (``n = A M w``,
+                        on carried state) is dataflow-independent of it, so
+                        the latency-hiding scheduler runs the SpMV while
+                        the ``psum`` is in flight (the same
+                        ``optimization_barrier`` idiom as ``bicgstab_b1``).
+                        The price: the convergence check lags one iteration
+                        (the freshest ‖r‖ is the previous body's) and two
+                        (four, preconditioned) extra vector recurrences.
+
+Numerical caveat: the merged/pipelined forms replace ``p·Ap`` (and, for
+BiCGStab, ‖r‖²) with recurrences; rounding makes them drift from the
+classics by O(ε·κ) per iteration, which can cost a few extra iterations
+near tight tolerances (asserted ≤ +10% by tests/test_reduction_hiding.py)
+and puts an O(ε·κ·‖b‖) floor on the attainable residual — in float32 the
+pipelined/merged-BiCGStab variants stall near ``1e-6·‖b‖``, so solve in
+f64 (the paper's setting) for tight absolute tolerances.
+The returned ``res_norm`` is each method's own estimate, like the classics.
 """
 
 from __future__ import annotations
@@ -85,9 +129,36 @@ class LocalOp:
         On a single device the block IS the domain, so this == matvec."""
         return self.matvec(x)
 
+    def dotn(self, *pairs) -> tuple:
+        """Stacked dot products — locally just the dots (no collective to
+        fuse); ``DistributedOp.dotn`` is the one-psum version."""
+        return tuple(jnp.vdot(a, b) for a, b in pairs)
+
 
 def _default_dot(a: jax.Array, b: jax.Array) -> jax.Array:
     return jnp.vdot(a, b)
+
+
+def _stacked_dot(A, dot):
+    """The fused-reduction hook of the merged/pipelined variants.
+
+    Returns ``dotn(*pairs) -> tuple`` computing every pair in ONE global
+    reduction.  When the caller passes the operator's own ``dot`` (or none),
+    the operator's ``dotn`` is used — ``DistributedOp.dotn`` stacks the
+    partials into a single ``psum``, which is the whole point of the merged
+    variants.  A foreign ``dot`` override (``SolverOptions.dot``) falls back
+    to per-pair calls, preserving its semantics at the cost of the fusion.
+    """
+    if dot is None or getattr(dot, "__self__", None) is A:
+        dn = getattr(A, "dotn", None)
+        if dn is not None:
+            return dn
+    d = dot or _default_dot
+
+    def dotn(*pairs):
+        return tuple(d(a, b) for a, b in pairs)
+
+    return dotn
 
 
 def _prepare(A, b, dot, norm_ref, tol):
@@ -221,6 +292,202 @@ def pcg(A, b, x0, *, tol=1e-6, maxiter=500, dot=None, norm_ref=None,
 
     x, r, p, rz, rr, k, hist = lax.while_loop(
         cond, body, (x0, r, p, rz, rr, 0, hist))
+    return SolveResult(x=x, iters=k, res_norm=jnp.sqrt(rr), history=hist)
+
+
+def _cg_merged_scalars(gamma, delta, gamma_prev, alpha_prev):
+    """β and the Saad-recurrence α of merged/pipelined CG.
+
+    ``α = γ/(δ − βγ/α_prev)`` equals classical CG's ``γ/(p·Ap)`` in exact
+    arithmetic; seeding ``γ_prev = inf, α_prev = 1`` makes the first pass
+    degenerate to ``β = 0, α = γ/δ`` without a cond.
+    """
+    beta = gamma / gamma_prev
+    alpha = gamma / (delta - beta * gamma / alpha_prev)
+    return alpha, beta
+
+
+def cg_merged(A, b, x0, *, tol=1e-6, maxiter=500, dot=None,
+              norm_ref=None) -> SolveResult:
+    """Merged-reduction CG (Chronopoulos–Gear): ONE stacked psum/iteration.
+
+    The SpMV is applied to ``r`` (``w = A r``) and both scalars the
+    iteration needs — ``γ = r·r`` and ``δ = w·r`` — come out of a single
+    stacked reduction; ``p·Ap`` is recovered by the Saad recurrence (see
+    ``_cg_merged_scalars``).  Arithmetically equivalent to ``cg`` (checked
+    by tests/test_reduction_hiding.py), one extra vector recurrence
+    (``s = A p``) of memory traffic.
+    """
+    dotn = _stacked_dot(A, dot)
+    dot, _, thresh2 = _prepare(A, b, dot, norm_ref, tol)
+    r = b - A.matvec(x0)
+    w = A.matvec(r)
+    gamma, delta = dotn((r, r), (w, r))
+    hist = _hist_init(maxiter, jnp.sqrt(gamma), b.dtype)
+    zero = jnp.zeros_like(b)
+    inf = jnp.asarray(jnp.inf, gamma.dtype)
+    one = jnp.asarray(1.0, gamma.dtype)
+
+    def cond(c):
+        _, _, _, _, _, gamma, _, _, _, k, _ = c
+        return (gamma >= thresh2) & (k < maxiter)
+
+    def body(c):
+        x, r, p, s, w, gamma, delta, gamma_prev, alpha_prev, k, hist = c
+        alpha, beta = _cg_merged_scalars(gamma, delta, gamma_prev, alpha_prev)
+        p = r + beta * p
+        s = w + beta * s                  # s = A p by recurrence — no SpMV on p
+        x = x + alpha * p
+        r = r - alpha * s
+        w = A.matvec(r)
+        gamma_new, delta_new = dotn((r, r), (w, r))   # the ONE reduction
+        hist = hist.at[k + 1].set(jnp.sqrt(gamma_new).astype(hist.dtype))
+        return (x, r, p, s, w, gamma_new, delta_new, gamma, alpha, k + 1, hist)
+
+    x, r, p, s, w, gamma, delta, _, _, k, hist = lax.while_loop(
+        cond, body, (x0, r, zero, zero, w, gamma, delta, inf, one, 0, hist))
+    return SolveResult(x=x, iters=k, res_norm=jnp.sqrt(gamma), history=hist)
+
+
+def pcg_merged(A, b, x0, *, tol=1e-6, maxiter=500, dot=None, norm_ref=None,
+               M=None) -> SolveResult:
+    """Merged-reduction preconditioned CG (Chronopoulos–Gear PCG).
+
+    Same recurrence as :func:`cg_merged` with ``u = M⁻¹ r``, ``w = A u``,
+    ``γ = r·u``, ``δ = w·u``; the TRUE-residual ``r·r`` rides in the same
+    stacked reduction (3 scalars, ONE psum), so stopping matches ``pcg``.
+    ``M`` must be SPD-preserving, like ``pcg``'s.
+    """
+    dotn = _stacked_dot(A, dot)
+    dot, _, thresh2 = _prepare(A, b, dot, norm_ref, tol)
+    apply_M = M if M is not None else (lambda v: v)
+    r = b - A.matvec(x0)
+    u = apply_M(r)
+    w = A.matvec(u)
+    gamma, delta, rr = dotn((r, u), (w, u), (r, r))
+    hist = _hist_init(maxiter, jnp.sqrt(rr), b.dtype)
+    zero = jnp.zeros_like(b)
+    inf = jnp.asarray(jnp.inf, gamma.dtype)
+    one = jnp.asarray(1.0, gamma.dtype)
+
+    def cond(c):
+        _, _, _, _, _, _, _, _, rr, _, _, k, _ = c
+        return (rr >= thresh2) & (k < maxiter)
+
+    def body(c):
+        x, r, u, p, s, w, gamma, delta, rr, gamma_prev, alpha_prev, k, hist = c
+        alpha, beta = _cg_merged_scalars(gamma, delta, gamma_prev, alpha_prev)
+        p = u + beta * p
+        s = w + beta * s
+        x = x + alpha * p
+        r = r - alpha * s
+        u = apply_M(r)
+        w = A.matvec(u)
+        gamma_new, delta_new, rr_new = dotn((r, u), (w, u), (r, r))
+        hist = hist.at[k + 1].set(jnp.sqrt(rr_new).astype(hist.dtype))
+        return (x, r, u, p, s, w, gamma_new, delta_new, rr_new,
+                gamma, alpha, k + 1, hist)
+
+    x, r, u, p, s, w, gamma, delta, rr, _, _, k, hist = lax.while_loop(
+        cond, body,
+        (x0, r, u, zero, zero, w, gamma, delta, rr, inf, one, 0, hist))
+    return SolveResult(x=x, iters=k, res_norm=jnp.sqrt(rr), history=hist)
+
+
+def cg_pipe(A, b, x0, *, tol=1e-6, maxiter=500, dot=None,
+            norm_ref=None) -> SolveResult:
+    """Pipelined CG (Ghysels–Vanroose): the ONE stacked reduction is issued
+    at the top of the body and the body's SpMV (``n = A w``, on carried
+    state) is dataflow-independent of it — the latency-hiding scheduler
+    runs the SpMV while the psum is in flight.  The ``optimization_barrier``
+    pins the SpMV as its own schedulable task (the ``bicgstab_b1`` idiom;
+    without it XLA may fuse the stencil apply into the reduction consumers
+    and close the window).
+
+    The freshest residual norm available to ``cond`` is the previous
+    body's, so the method typically reports one more iteration than ``cg``
+    at the same tolerance; two extra vector recurrences (``s = A p``,
+    ``z = A s``) pay for the hiding.
+    """
+    dotn = _stacked_dot(A, dot)
+    dot, _, thresh2 = _prepare(A, b, dot, norm_ref, tol)
+    r = b - A.matvec(x0)
+    w = A.matvec(r)
+    (rr0,) = dotn((r, r))
+    hist = _hist_init(maxiter, jnp.sqrt(rr0), b.dtype)
+    zero = jnp.zeros_like(b)
+    inf = jnp.asarray(jnp.inf, rr0.dtype)
+    one = jnp.asarray(1.0, rr0.dtype)
+
+    def cond(c):
+        _, _, _, _, _, _, _, _, rr, k, _ = c
+        return (rr >= thresh2) & (k < maxiter)
+
+    def body(c):
+        x, r, w, p, s, z, gamma_prev, alpha_prev, rr, k, hist = c
+        gamma, delta = dotn((r, r), (w, r))           # issued...
+        n = lax.optimization_barrier(A.matvec(w))     # ...hidden behind this
+        alpha, beta = _cg_merged_scalars(gamma, delta, gamma_prev, alpha_prev)
+        z = n + beta * z                  # z = A s by recurrence
+        s = w + beta * s                  # s = A p by recurrence
+        p = r + beta * p
+        x = x + alpha * p
+        r = r - alpha * s
+        w = w - alpha * z                 # w = A r by recurrence
+        hist = hist.at[k + 1].set(jnp.sqrt(gamma).astype(hist.dtype))
+        return (x, r, w, p, s, z, gamma, alpha, gamma, k + 1, hist)
+
+    x, r, w, p, s, z, _, _, rr, k, hist = lax.while_loop(
+        cond, body, (x0, r, w, zero, zero, zero, inf, one, rr0, 0, hist))
+    return SolveResult(x=x, iters=k, res_norm=jnp.sqrt(rr), history=hist)
+
+
+def pcg_pipe(A, b, x0, *, tol=1e-6, maxiter=500, dot=None, norm_ref=None,
+             M=None) -> SolveResult:
+    """Pipelined preconditioned CG (Ghysels–Vanroose Alg. 3).
+
+    Like :func:`cg_pipe` with ``u = M⁻¹ r`` maintained by recurrence: the
+    stacked reduction (``γ = r·u``, ``δ = w·u``, TRUE ``r·r`` — ONE psum)
+    overlaps both the preconditioner apply ``m = M⁻¹ w`` and the SpMV
+    ``n = A m``.  Four extra recurrences (``s, q, z, u``); stopping lags one
+    iteration like the unpreconditioned pipeline.
+    """
+    dotn = _stacked_dot(A, dot)
+    dot, _, thresh2 = _prepare(A, b, dot, norm_ref, tol)
+    apply_M = M if M is not None else (lambda v: v)
+    r = b - A.matvec(x0)
+    u = apply_M(r)
+    w = A.matvec(u)
+    (rr0,) = dotn((r, r))
+    hist = _hist_init(maxiter, jnp.sqrt(rr0), b.dtype)
+    zero = jnp.zeros_like(b)
+    inf = jnp.asarray(jnp.inf, rr0.dtype)
+    one = jnp.asarray(1.0, rr0.dtype)
+
+    def cond(c):
+        _, _, _, _, _, _, _, _, _, _, rr, k, _ = c
+        return (rr >= thresh2) & (k < maxiter)
+
+    def body(c):
+        x, r, u, w, p, s, q, z, gamma_prev, alpha_prev, rr, k, hist = c
+        gamma, delta, rr_new = dotn((r, u), (w, u), (r, r))   # issued...
+        m = apply_M(w)                                # ...hidden behind the
+        n = lax.optimization_barrier(A.matvec(m))     # apply and the SpMV
+        alpha, beta = _cg_merged_scalars(gamma, delta, gamma_prev, alpha_prev)
+        z = n + beta * z                  # z = A q by recurrence
+        q = m + beta * q                  # q = M⁻¹ s by recurrence
+        s = w + beta * s                  # s = A p by recurrence
+        p = u + beta * p
+        x = x + alpha * p
+        r = r - alpha * s
+        u = u - alpha * q                 # u = M⁻¹ r by recurrence
+        w = w - alpha * z                 # w = A u by recurrence
+        hist = hist.at[k + 1].set(jnp.sqrt(rr_new).astype(hist.dtype))
+        return (x, r, u, w, p, s, q, z, gamma, alpha, rr_new, k + 1, hist)
+
+    x, r, u, w, p, s, q, z, _, _, rr, k, hist = lax.while_loop(
+        cond, body,
+        (x0, r, u, w, zero, zero, zero, zero, inf, one, rr0, 0, hist))
     return SolveResult(x=x, iters=k, res_norm=jnp.sqrt(rr), history=hist)
 
 
@@ -374,6 +641,104 @@ def bicgstab_b1(
     return SolveResult(x=x, iters=k, res_norm=jnp.sqrt(beta_rr), history=hist)
 
 
+def _bicgstab_merged_loop(matvec, dotn, r0, y0, *, thresh2, maxiter,
+                          hist_dtype):
+    """The single-reduction BiCGStab iteration, shared by the plain and the
+    right-preconditioned form (which passes ``matvec = A∘M⁻¹``).
+
+    Auxiliary images ``w = A r``, ``t = A w``, ``s = A p``, ``z = A s`` are
+    maintained by recurrence so that ω's pair, ρ, the α denominator
+    ``r̂·(A p)`` and ‖r‖² are all linear in dots of vectors available
+    BEFORE ω — nine dots, ONE stacked psum per iteration.  Two SpMVs
+    remain (``v = A z`` and ``t = A w_new``); ``v`` is dataflow-independent
+    of the reduction, so the scheduler can hide the psum behind it (the
+    ``optimization_barrier`` pins it as its own task).
+    """
+    w = matvec(r0)
+    t = matvec(w)
+    rhat = r0
+    rho, rhw = dotn((rhat, r0), (rhat, w))
+    alpha = rho / rhw
+    rr = rho                               # r̂ = r0 ⇒ (r̂,r0) = ‖r0‖²
+    hist = _hist_init(maxiter, jnp.sqrt(rr), hist_dtype)
+
+    def cond(c):
+        rr, k = c[10], c[11]
+        return (rr >= thresh2) & (k < maxiter)
+
+    def body(c):
+        y, r, w, t, p, s, z, rhat, rho, alpha, rr, k, hist = c
+        q = r - alpha * s                  # classical s_j
+        yv = w - alpha * z                 # = A q
+        v = lax.optimization_barrier(matvec(z))      # SpMV 1 — independent...
+        (qy, yy, qq, rhq, rhy, rht, rhv, rhz, rhs) = dotn(   # ...of the ONE
+            (q, yv), (yv, yv), (q, q), (rhat, q), (rhat, yv),  # stacked psum
+            (rhat, t), (rhat, v), (rhat, z), (rhat, s))
+        omega = qy / yy
+        y = y + alpha * p + omega * q
+        r = q - omega * yv
+        # recurrence-based ‖r‖² (the stability caveat in docs/API.md):
+        # ‖q − ωy‖² from pre-update dots; clamp the rounding negatives.
+        rr_new = jnp.maximum(qq - 2.0 * omega * qy + omega * omega * yy, 0.0)
+        rho_new = rhq - omega * rhy
+        beta = (rho_new / rho) * (alpha / omega)
+        w = yv - omega * (t - alpha * v)   # = A r_new
+        t = matvec(w)                      # SpMV 2
+        rhw = rhy - omega * (rht - alpha * rhv)      # (r̂, w_new)
+        alpha_new = rho_new / (rhw + beta * (rhs - omega * rhz))
+        p = r + beta * (p - omega * s)
+        s = w + beta * (s - omega * z)     # = A p_new
+        z = t + beta * (z - omega * v)     # = A s_new
+        hist = hist.at[k + 1].set(jnp.sqrt(rr_new).astype(hist.dtype))
+        return (y, r, w, t, p, s, z, rhat, rho_new, alpha_new, rr_new,
+                k + 1, hist)
+
+    init = (y0, r0, w, t, r0, w, t, rhat, rho, alpha, rr, 0, hist)
+    y, r, w, t, p, s, z, rhat, rho, alpha, rr, k, hist = lax.while_loop(
+        cond, body, init)
+    return y, rr, k, hist
+
+
+def bicgstab_merged(A, b, x0, *, tol=1e-6, maxiter=500, dot=None,
+                    norm_ref=None) -> SolveResult:
+    """Merged-reduction BiCGStab: ONE stacked psum per iteration (vs the
+    classic's 3 barriers), two SpMVs, at the cost of four auxiliary
+    Krylov-image recurrences.  See ``_bicgstab_merged_loop``."""
+    dotn = _stacked_dot(A, dot)
+    dot, _, thresh2 = _prepare(A, b, dot, norm_ref, tol)
+    r0 = b - A.matvec(x0)
+    x, rr, k, hist = _bicgstab_merged_loop(
+        A.matvec, dotn, r0, x0, thresh2=thresh2, maxiter=maxiter,
+        hist_dtype=b.dtype)
+    return SolveResult(x=x, iters=k, res_norm=jnp.sqrt(rr), history=hist)
+
+
+def pbicgstab_merged(A, b, x0, *, tol=1e-6, maxiter=500, dot=None,
+                     norm_ref=None, M=None) -> SolveResult:
+    """Right-preconditioned merged BiCGStab.
+
+    Runs the single-reduction core on ``B = A∘M⁻¹`` with rhs ``r0`` and a
+    ZERO initial guess, then recovers ``x = x0 + M⁻¹ y`` with one final
+    apply — right preconditioning leaves the residual untouched, so the
+    stopping criterion (and iteration counts) stay TRUE-residual like
+    ``pbicgstab``'s, and the per-iteration reduction count stays ONE.
+    ``M`` need not be SPD-preserving.
+    """
+    dotn = _stacked_dot(A, dot)
+    dot, _, thresh2 = _prepare(A, b, dot, norm_ref, tol)
+    apply_M = M if M is not None else (lambda v: v)
+
+    def matvec_B(v):
+        return A.matvec(apply_M(v))
+
+    r0 = b - A.matvec(x0)
+    y, rr, k, hist = _bicgstab_merged_loop(
+        matvec_B, dotn, r0, jnp.zeros_like(b), thresh2=thresh2,
+        maxiter=maxiter, hist_dtype=b.dtype)
+    return SolveResult(x=x0 + apply_M(y), iters=k, res_norm=jnp.sqrt(rr),
+                       history=hist)
+
+
 # =============================================================================
 # Stationary methods
 # =============================================================================
@@ -501,14 +866,25 @@ SOLVERS: dict[str, Callable] = {
     "gauss_seidel_rb": sym_gauss_seidel_rb,
     "cg": cg,
     "cg_nb": cg_nb,
+    "cg_merged": cg_merged,
+    "cg_pipe": cg_pipe,
     "pcg": pcg,
+    "pcg_merged": pcg_merged,
+    "pcg_pipe": pcg_pipe,
     "bicgstab": bicgstab,
     "bicgstab_b1": bicgstab_b1,
+    "bicgstab_merged": bicgstab_merged,
     "pbicgstab": pbicgstab,
+    "pbicgstab_merged": pbicgstab_merged,
 }
 
 #: methods refining a classical baseline (the paper's variants + the
-#: preconditioned forms) mapped to that baseline
+#: preconditioned forms + the PR-4 reduction-hiding restructurings)
+#: mapped to that baseline
 VARIANT_OF = {"cg_nb": "cg", "bicgstab_b1": "bicgstab",
               "gauss_seidel": "gauss_seidel_rb",
-              "pcg": "cg", "pbicgstab": "bicgstab"}
+              "pcg": "cg", "pbicgstab": "bicgstab",
+              "cg_merged": "cg", "cg_pipe": "cg",
+              "pcg_merged": "pcg", "pcg_pipe": "pcg",
+              "bicgstab_merged": "bicgstab",
+              "pbicgstab_merged": "pbicgstab"}

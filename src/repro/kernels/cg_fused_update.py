@@ -1,5 +1,6 @@
-"""Pallas TPU kernel: CG-NB's fused Tk1&2 (+Tk2's reduction partial).
+"""Pallas TPU kernels: fused CG vector-update passes.
 
+``cg_fused_update`` — CG-NB's fused Tk1&2 (+Tk2's reduction partial).
 Alg. 1 lines 6-8 share all their operands, so the paper assigns them to
 adjacent tasks; the TPU analogue is a single VMEM pass computing
 
@@ -9,6 +10,17 @@ adjacent tasks; the TPU analogue is a single VMEM pass computing
 
 One read of {r, Ar, p, Ap} + one write of {p_new, Ap_new} instead of three
 separate kernels (two axpbys + a dot) costing 6 reads + 2 writes.
+
+``fused_cg_body`` (PR 4) — the ENTIRE vector-update half of a merged-CG
+iteration (``core.solvers.cg_merged``) in one VMEM pass:
+
+    p' = r + β·p,   s' = w + β·s,   x' = x + α·p',   r' = r − α·s'
+
+5 reads + 4 writes instead of the four separate axpys' 8 reads + 4 writes
+(and three kernel-switch HBM round trips).  Together with
+``spmv_dot.stencil_spmv_dots`` this collapses a merged-CG iteration to two
+HBM passes — the "single-pass fused iteration" benchmarked by
+benchmarks/bench_kernels.py.  Oracle: ``ref.fused_cg_body_ref``.
 """
 
 from __future__ import annotations
@@ -79,3 +91,58 @@ def cg_fused_update(
         ap_new.reshape(-1)[:n].reshape(shape),
         acc[0, 0],
     )
+
+
+def _body_kernel(*refs):
+    coef, x, r, p, s, w, x_out, r_out, p_out, s_out = refs
+    alpha = coef[0, 0]
+    beta = coef[0, 1]
+    p_new = r[...] + beta * p[...]
+    s_new = w[...] + beta * s[...]
+    p_out[...] = p_new
+    s_out[...] = s_new
+    x_out[...] = x[...] + alpha * p_new
+    r_out[...] = r[...] - alpha * s_new
+
+
+@functools.partial(jax.jit, static_argnames=("br", "interpret"))
+def fused_cg_body(
+    alpha: jax.Array,
+    beta: jax.Array,
+    x: jax.Array,
+    r: jax.Array,
+    p: jax.Array,
+    s: jax.Array,
+    w: jax.Array,
+    *,
+    br: int = 256,
+    interpret: bool = True,
+):
+    """One merged-CG iteration's four vector updates in one VMEM pass.
+
+    Returns ``(x', r', p', s')`` with ``p' = r + β p``, ``s' = w + β s``,
+    ``x' = x + α p'``, ``r' = r − α s'`` (the Chronopoulos–Gear ordering:
+    x/r consume the UPDATED p/s).
+    """
+    shape = x.shape
+    x2, n = _to_2d(x)
+    r2, _ = _to_2d(r)
+    p2, _ = _to_2d(p)
+    s2, _ = _to_2d(s)
+    w2, _ = _to_2d(w)
+    rows = x2.shape[0]
+    brr = min(br, rows)
+    while rows % brr:
+        brr -= 1
+    coef = jnp.stack([alpha, beta]).astype(x.dtype).reshape(1, 2)
+    blk = lambda: pl.BlockSpec((brr, ROW), lambda i: (i, 0))
+    outs = pl.pallas_call(
+        _body_kernel,
+        grid=(rows // brr,),
+        in_specs=[pl.BlockSpec((1, 2), lambda i: (0, 0)),
+                  blk(), blk(), blk(), blk(), blk()],
+        out_specs=[blk(), blk(), blk(), blk()],
+        out_shape=[jax.ShapeDtypeStruct(x2.shape, x.dtype)] * 4,
+        interpret=interpret,
+    )(coef, x2, r2, p2, s2, w2)
+    return tuple(o.reshape(-1)[:n].reshape(shape) for o in outs)

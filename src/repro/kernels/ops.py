@@ -15,7 +15,11 @@ import jax
 
 from repro.core.operators import Stencil
 from repro.kernels import ref
-from repro.kernels.cg_fused_update import cg_fused_update as _cg_fused_update
+from repro.kernels.cg_fused_update import (
+    cg_fused_update as _cg_fused_update,
+    fused_cg_body as _fused_cg_body,
+)
+from repro.kernels.spmv_dot import stencil_spmv_dots as _stencil_spmv_dots
 from repro.kernels.fused_axpby import (
     fused_axpby as _fused_axpby,
     fused_axpby_dot as _fused_axpby_dot,
@@ -51,8 +55,19 @@ def axpbypcz_dot(a, x, b, y, c, z, w):
     return _fused_axpby_dot(a, x, b, y, c, z, w, interpret=_interpret())
 
 
+def spmv_dots(xp: jax.Array, stencil: Stencil, *, bz: int = 8):
+    """``(A·x, (A·x)·x, x·x)`` in one VMEM pass (merged CG's reduction pair)."""
+    return _stencil_spmv_dots(xp, stencil=stencil, bz=bz,
+                              interpret=_interpret())
+
+
 def cg_update(beta, r, ar, p, ap):
     return _cg_fused_update(beta, r, ar, p, ap, interpret=_interpret())
+
+
+def cg_body(alpha, beta, x, r, p, s, w):
+    """Merged-CG's four vector updates in one VMEM pass -> (x', r', p', s')."""
+    return _fused_cg_body(alpha, beta, x, r, p, s, w, interpret=_interpret())
 
 
 def gs_half_sweep(xp, b, stencil: Stencil, colour: int, *, bz: int = 8):

@@ -19,6 +19,23 @@ def stencil_spmv_dot_ref(xp: jax.Array, *, stencil: Stencil):
     return y, jnp.sum(y.astype(acc_dtype) * x.astype(acc_dtype))
 
 
+def stencil_spmv_dots_ref(xp: jax.Array, *, stencil: Stencil):
+    """SpMV + BOTH merged-CG partials: ``(A x, (A x)·x, x·x)``."""
+    y = stencil.matvec_padded(xp)
+    x = xp[1:-1, 1:-1, 1:-1]
+    acc_dtype = jnp.float32 if xp.dtype == jnp.bfloat16 else xp.dtype
+    ya = y.astype(acc_dtype)
+    xa = x.astype(acc_dtype)
+    return y, jnp.sum(ya * xa), jnp.sum(xa * xa)
+
+
+def fused_cg_body_ref(alpha, beta, x, r, p, s, w):
+    """Merged-CG vector updates: p' = r+βp, s' = w+βs, x' = x+αp', r' = r−αs'."""
+    p_new = r + beta * p
+    s_new = w + beta * s
+    return x + alpha * p_new, r - alpha * s_new, p_new, s_new
+
+
 def fused_axpby_ref(a, x, b, y, c, z):
     return a * x + b * y + c * z
 

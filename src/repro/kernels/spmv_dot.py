@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: stencil SpMV + BOTH merged-CG dot partials, one pass.
+
+The merged-reduction CG iteration (``core.solvers.cg_merged``) needs exactly
+two scalars per iteration — ``γ = r·r`` and ``δ = (A r)·r`` — and the one
+SpMV that produces ``w = A r``.  Streaming the slab once and accumulating
+both partials alongside the stencil apply turns the classic
+SpMV + dot + dot sequence (three HBM sweeps, two kernel-switch barriers)
+into a single VMEM pass: the memory-side analogue of stacking the two
+``MPI_Allreduce``s into one.
+
+Extends ``kernels/stencil_spmv.py``'s ``fuse_dot`` (which emits only
+``(A x)·x``) with the second accumulator; same overlapping-window BlockSpec,
+same sequential-grid accumulation (TPU grid steps run in order, so the
+revisited (1, 2) accumulator block is well-defined).  Oracle:
+``kernels/ref.py::stencil_spmv_dots_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.operators import Stencil
+from repro.kernels.stencil_spmv import _pick_bz, _window_spec, apply_stencil_slab
+
+
+def _kernel(stencil: Stencil, nx: int, ny: int, bz: int):
+    def body(xin, out, acc):
+        # xin: (nx+2, ny+2, bz+2) overlapping window; out: (nx, ny, bz);
+        # acc: (1, 2) = [Σ y·x, Σ x·x] partials, revisited every grid step
+        x_slab = xin[...]
+        centre = x_slab[1:-1, 1:-1, 1:-1]
+        y = apply_stencil_slab(stencil, x_slab, nx, ny, bz)
+        out[...] = y
+        i = pl.program_id(0)
+
+        @pl.when(i == 0)
+        def _init():
+            acc[...] = jnp.zeros((1, 2), acc.dtype)
+
+        acc[0, 0] += jnp.sum(y * centre).astype(acc.dtype)
+        acc[0, 1] += jnp.sum(centre * centre).astype(acc.dtype)
+
+    return body
+
+
+@functools.partial(jax.jit, static_argnames=("stencil", "bz", "interpret"))
+def stencil_spmv_dots(
+    xp: jax.Array,
+    *,
+    stencil: Stencil,
+    bz: int = 8,
+    interpret: bool = True,
+):
+    """``y = A·x``, ``y·x`` and ``x·x`` from the halo-padded ``xp``.
+
+    ``xp``: (nx+2, ny+2, nz+2).  Returns ``(y, y·x, x·x)`` — for merged CG,
+    with ``x = r``: ``w = A r``, ``δ`` and ``γ`` in one HBM pass.
+    """
+    nx, ny, nz = xp.shape[0] - 2, xp.shape[1] - 2, xp.shape[2] - 2
+    bz = _pick_bz(nz, bz)
+    acc_dtype = jnp.float32 if xp.dtype == jnp.bfloat16 else xp.dtype
+
+    y, acc = pl.pallas_call(
+        _kernel(stencil, nx, ny, bz),
+        grid=(nz // bz,),
+        in_specs=[_window_spec(nx, ny, bz)],
+        out_specs=[
+            pl.BlockSpec((nx, ny, bz), lambda i: (0, 0, i)),
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nx, ny, nz), xp.dtype),
+            jax.ShapeDtypeStruct((1, 2), acc_dtype),
+        ],
+        interpret=interpret,
+    )(xp)
+    return y, acc[0, 0], acc[0, 1]

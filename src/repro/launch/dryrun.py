@@ -351,7 +351,12 @@ def run_solver_cell(method: str, stencil: str, mesh_kind: str, *,
     sh = NamedSharding(mesh, spec)
     arr = jax.ShapeDtypeStruct(gshape, jnp.float32, sharding=sh)
     scal = jax.ShapeDtypeStruct((), jnp.float32)
-    lowered = jax.jit(fn).lower(arr, arr, arr, arr, arr, scal, scal)
+    # the step state is method-dependent (the reduction-hiding variants
+    # carry more recurrence vectors than the classic 4-slot layout)
+    from repro.core.distributed import step_state_layout
+    vec_names, scal_names = step_state_layout(method)
+    args = [arr] * (1 + len(vec_names)) + [scal] * len(scal_names)
+    lowered = jax.jit(fn).lower(*args)
     compiled = lowered.compile()
     mem = compiled.memory_analysis()
     ca = cost_analysis(compiled)

@@ -66,6 +66,38 @@ def test_fused_axpby(n, dt):
                                rtol=1e-3 if dt == jnp.float32 else 1e-12)
 
 
+@pytest.mark.parametrize("stencil", STENCILS, ids=lambda s: s.name)
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dt", DTYPES, ids=str)
+def test_stencil_spmv_dots(stencil, shape, dt):
+    """The merged-CG kernel: SpMV + BOTH dot partials in one pass."""
+    x = jax.random.normal(jax.random.PRNGKey(8), shape, dt)
+    xp = jnp.pad(x, 1)
+    y, d_yx, d_xx = ops.spmv_dots(xp, stencil)
+    yr, dr_yx, dr_xx = ref.stencil_spmv_dots_ref(xp, stencil=stencil)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), **tols(dt))
+    rt = 1e-3 if dt == jnp.float32 else 1e-12
+    np.testing.assert_allclose(float(d_yx), float(dr_yx), rtol=rt)
+    np.testing.assert_allclose(float(d_xx), float(dr_xx), rtol=rt)
+
+
+@pytest.mark.parametrize("n", [1000, 4096, 5000])
+@pytest.mark.parametrize("dt", DTYPES, ids=str)
+def test_fused_cg_body(n, dt):
+    """The merged-CG vector-update kernel: 4 axpys in one pass, and the
+    Chronopoulos–Gear ordering (x/r consume the UPDATED p/s)."""
+    ks = jax.random.split(jax.random.PRNGKey(9), 5)
+    x, r, p, s, w = (jax.random.normal(k, (n,), dt) for k in ks)
+    alpha, beta = jnp.asarray(0.37, dt), jnp.asarray(-1.4, dt)
+    outs = ops.cg_body(alpha, beta, x, r, p, s, w)
+    refs = ref.fused_cg_body_ref(alpha, beta, x, r, p, s, w)
+    for o, orf in zip(outs, refs):
+        np.testing.assert_allclose(np.asarray(o), np.asarray(orf), **tols(dt))
+    # the ordering really matters: x' uses p' (not the old p)
+    x_new = np.asarray(outs[0])
+    assert not np.allclose(x_new, np.asarray(x + alpha * p), atol=1e-6)
+
+
 @pytest.mark.parametrize("dt", DTYPES, ids=str)
 def test_cg_fused_update(dt):
     ks = jax.random.split(jax.random.PRNGKey(3), 4)
