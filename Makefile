@@ -5,10 +5,14 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast verify smoke bench bench-kernels bench-precond examples
+.PHONY: test test-fast verify smoke bench bench-kernels bench-precond examples lint
 
 test:
 	$(PYTHON) -m pytest -x -q
+
+# correctness-critical lint (ruff.toml pins the rule set); CI runs the same
+lint:
+	ruff check src tests benchmarks examples
 
 # the tier-1 gate, exactly as ROADMAP.md specifies it (== make test)
 verify: test

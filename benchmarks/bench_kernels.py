@@ -168,10 +168,33 @@ def bench_grid(shape, stencil, *, use_pallas: bool, n_iters: int,
     return out
 
 
+def check_record(path: str) -> dict:
+    """The artifact-level regression gate: assert an existing
+    BENCH_kernels.json still reports the fused iteration ≥ the fork-join
+    kernel baseline on every grid (exits non-zero otherwise).  CI runs this
+    against the freshly-written smoke record so a refactor that silently
+    slows the fused path fails the build even if the bench itself ran."""
+    with open(path) as f:
+        record = json.load(f)
+    bad = {k: g["fused_vs_classic_kernels"] for k, g in record["grids"].items()
+           if g["fused_vs_classic_kernels"] < 1.0}
+    if bad:
+        raise SystemExit(
+            f"[bench_kernels] {path}: fused iteration slower than the "
+            f"fork-join kernel baseline: {bad}")
+    print(f"[bench_kernels] {path}: fused >= fork-join baseline on "
+          f"{sorted(record['grids'])} "
+          f"({ {k: round(g['fused_vs_classic_kernels'], 2) for k, g in record['grids'].items()} })")
+    return record
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny grid + few repeats (the CI regression gate)")
+    ap.add_argument("--check", metavar="JSON",
+                    help="don't bench: assert an existing BENCH_kernels.json "
+                         "still reports fused >= the fork-join baseline")
     ap.add_argument("--stencil", default="27pt", choices=["7pt", "27pt"])
     ap.add_argument("--iters", type=int, default=None,
                     help="iterations per timed run (amortises dispatch "
@@ -184,6 +207,9 @@ def main(argv=None) -> dict:
                          "an emulator, not a measurement)")
     ap.add_argument("--out", default=os.path.join(ROOT, "BENCH_kernels.json"))
     args = ap.parse_args(argv)
+
+    if args.check:
+        return check_record(args.check)
 
     enable_f64()
     use_pallas = (jax.default_backend() == "tpu" if args.pallas is None
@@ -222,11 +248,8 @@ def main(argv=None) -> dict:
     print(f"[bench_kernels] wrote {args.out}")
     # the regression gate: fusion losing to the fork-join kernel baseline
     # means a kernel (or its dispatch structure) regressed — fail loudly.
-    bad = {k: g["fused_vs_classic_kernels"] for k, g in record["grids"].items()
-           if g["fused_vs_classic_kernels"] < 1.0}
-    if bad:
-        raise SystemExit(f"[bench_kernels] fused iteration slower than the "
-                         f"unfused classic: {bad}")
+    # Same criterion as the standalone --check mode, by construction.
+    check_record(args.out)
     return record
 
 

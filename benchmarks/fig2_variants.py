@@ -39,6 +39,7 @@ from jax.sharding import NamedSharding
 from repro.api import SolverOptions, SolverSession
 from repro.analysis.hlo import overlap_slack
 from repro.core.compat import make_mesh
+from repro.core.distributed import step_state_layout
 from repro.core.problems import make_problem
 
 view = os.environ.get("TRACE_VIEW", "fused")
@@ -55,7 +56,9 @@ for m in ("cg", "cg_nb", "bicgstab", "bicgstab_b1"):
         matvec_padded=prob.stencil.matvec_padded))
     fn, layout = sess.step_fn()
     sh = NamedSharding(mesh, layout.spec())
-    args = [jax.device_put(b, sh)] * 5 + [jnp.array(1.0, jnp.float32)] * 2
+    vecs, scals = step_state_layout(m)   # derived from the MethodDef
+    args = ([jax.device_put(b, sh)] * (1 + len(vecs))
+            + [jnp.array(1.0, jnp.float32)] * len(scals))
     c = jax.jit(fn).lower(*args).compile()
     rep = [r for r in overlap_slack(c.as_text())
            if r["op"].startswith("all-reduce")]

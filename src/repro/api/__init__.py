@@ -8,6 +8,7 @@ from repro.api.registry import (
     RegistryConsistencyError,
     SolverSpec,
     check_consistent_with_core,
+    fused_solver_names,
     get_solver,
     register_solver,
     solver_names,
@@ -29,6 +30,7 @@ __all__ = [
     "SolverSession",
     "SolverSpec",
     "check_consistent_with_core",
+    "fused_solver_names",
     "get_solver",
     "make_precond",
     "precond_names",

@@ -16,6 +16,7 @@ import dataclasses
 from typing import Callable
 
 from repro.core import solvers as _solvers
+from repro.core.methods import METHODS, MethodDef
 
 #: how a reduction's latency is hidden (the scaling model's terms):
 #: "none" = blocking barrier, "vec" = overlapped with one vector update,
@@ -56,7 +57,12 @@ class SolverSpec:
     accepts_precond: bool = False     # fn takes M= (repro.precond apply)
     precond_applies_per_iter: int = 0  # M^{-1} applications per iteration
     reduce_hide: str = "none"         # reduction scheduling (REDUCE_HIDES)
+    fused_kernels: tuple[str, ...] = ()  # Pallas fused-body capability
     description: str = ""
+    #: the single-source algorithm definition (repro.core.methods); attached
+    #: and cross-validated by register_solver — every metadata field that IS
+    #: derivable from the definition must agree with it.
+    method_def: MethodDef | None = None
 
     def __post_init__(self):
         if not self.halo_hides:
@@ -99,8 +105,37 @@ class SolverSpec:
         """SpMVs whose halo exchange overlaps interior compute."""
         return sum(1 for h in self.halo_hides if h == "interior")
 
+    @property
+    def has_fused_body(self) -> bool:
+        """Whether the method declares a fused Pallas iteration body — the
+        capability the facade's ``pallas=True`` routing queries."""
+        return bool(self.fused_kernels)
+
 
 REGISTRY: dict[str, SolverSpec] = {}
+
+
+class RegistryConsistencyError(RuntimeError):
+    """The registry drifted from what ``core.solvers``/``core.methods``
+    export."""
+
+
+def _validate_against_method(spec: SolverSpec, mdef: MethodDef) -> None:
+    """Registry metadata that is derivable from the MethodDef must agree
+    with it — the definition is the single source of truth."""
+    derived = {
+        "stationary": mdef.stationary,
+        "accepts_precond": mdef.accepts_precond,
+        "reduce_hide": mdef.reduce_hide,
+        "variant_of": mdef.variant_of,
+        "fused_kernels": mdef.fused_kernels,
+    }
+    for field, want in derived.items():
+        have = getattr(spec, field)
+        if have != want:
+            raise RegistryConsistencyError(
+                f"{spec.name!r}: registry declares {field}={have!r} but the "
+                f"MethodDef says {want!r}")
 
 
 def register_solver(spec: SolverSpec) -> SolverSpec:
@@ -110,6 +145,13 @@ def register_solver(spec: SolverSpec) -> SolverSpec:
         raise ValueError(
             f"{spec.name!r}: unknown baseline {spec.variant_of!r} "
             f"(register the classical method first)")
+    if spec.name not in METHODS:
+        raise RegistryConsistencyError(
+            f"{spec.name!r}: no MethodDef in repro.core.methods — define the "
+            f"algorithm first (docs/API.md §'Authoring a new method')")
+    mdef = METHODS[spec.name]
+    _validate_against_method(spec, mdef)
+    object.__setattr__(spec, "method_def", mdef)
     REGISTRY[spec.name] = spec
     return spec
 
@@ -206,6 +248,7 @@ register_solver(SolverSpec(
     name="cg_merged", fn=_solvers.cg_merged,
     reduction_hides=("none",), spmvs_per_iter=1, spd_required=True,
     variant_of="cg", reduce_hide="merged",
+    fused_kernels=("fused_cg_body", "spmv_dots"),
     description="Chronopoulos–Gear CG: all dots in ONE stacked psum "
                 "(Saad recurrence for p·Ap)"))
 
@@ -246,8 +289,10 @@ register_solver(SolverSpec(
                 "(merged core on A∘M⁻¹, true-residual stopping)"))
 
 
-class RegistryConsistencyError(RuntimeError):
-    """The registry drifted from what ``core.solvers`` exports."""
+def fused_solver_names() -> list[str]:
+    """Methods whose MethodDef declares a fused Pallas iteration body — the
+    capability query behind the facade's ``pallas=True`` routing."""
+    return sorted(n for n, s in REGISTRY.items() if s.has_fused_body)
 
 
 def check_consistent_with_core(registry=None, solvers=None,

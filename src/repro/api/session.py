@@ -128,12 +128,18 @@ class SolverSession:
         return kw
 
     def _use_fused_body(self) -> bool:
-        """Route single-device ``cg_merged`` + ``pallas=True`` solves to the
-        fully fused iteration (``kernels.fused_cg``): the SpMV *and* its two
-        dot partials in one VMEM pass, the four vector updates in another —
-        instead of merely swapping the SpMV under the jnp solver."""
-        return (self.backend.kind == "local" and self.options.pallas
-                and self.method == "cg_merged"
+        """Route ``pallas=True`` solves of any method whose ``MethodDef``
+        declares a fused kernel body (the registry's ``has_fused_body``
+        capability — not a hard-coded method name) to the fully fused
+        iteration: e.g. merged CG's SpMV *and* its two dot partials in one
+        VMEM pass, the four vector updates in another — instead of merely
+        swapping the SpMV under the jnp solver.  Works on the local AND the
+        shard_map backend (``PallasOp`` supplies halos/psums there).
+        Single-RHS solves only: the batched path always runs the jnp body
+        (with the Pallas SpMV under ``pallas=True``) — vmapping the fused
+        kernels is not supported."""
+        return (self.options.pallas and self.spec.has_fused_body
+                and self.precond is None
                 and self.options.matvec_padded is None
                 and self.options.dot is None)
 
@@ -147,15 +153,26 @@ class SolverSession:
         # and callers routinely keep it.
         jit_kw = dict(donate_argnums=(1,)) if donate else {}
         if self._use_fused_body():
-            from repro.kernels.fused_cg import cg_merged_fused
-            stencil = self.problem.stencil
+            if self.backend.kind == "local":
+                from repro.core.methods import Ops, run_method
+                from repro.kernels.pallas_op import PallasOp
+                A = PallasOp(LocalOp(self.problem.stencil))
+                mdef = self.spec.method_def
 
-            def run_fused(b, x0):
-                return cg_merged_fused(stencil, b, x0, tol=opts.tol,
-                                       maxiter=opts.maxiter,
-                                       norm_ref=opts.norm_ref)
+                def run_fused(b, x0):
+                    ops = Ops(A, b, norm_ref=opts.norm_ref)
+                    return run_method(mdef, ops, x0, tol=opts.tol,
+                                      maxiter=opts.maxiter, fused=True)
 
-            return jax.jit(run_fused, **jit_kw)
+                return jax.jit(run_fused, **jit_kw)
+            # fused kernels inside the shard_map body (PallasOp wraps the
+            # DistributedOp for halos + the stacked partial-dot psum)
+            fn, _ = solve_shardmap(
+                self.problem, self.method, self.backend.mesh,
+                dims_map=opts.dims_map, tol=opts.tol, maxiter=opts.maxiter,
+                norm_ref=opts.norm_ref, halo_mode=self.halo_mode,
+                pallas_fused=True)
+            return jax.jit(fn, **jit_kw)
         if self.backend.kind == "local":
             A = LocalOp(self.problem.stencil, matvec_padded=self._matvec)
 

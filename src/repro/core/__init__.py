@@ -11,6 +11,15 @@ from repro.core.operators import (
     build_ell_from_stencil,
     touched_elements_per_iter,
 )
+from repro.core.methods import (
+    METHODS,
+    MethodDef,
+    Ops,
+    get_method,
+    method_names,
+    register_method,
+    run_method,
+)
 from repro.core.problems import HPCGProblem, default_dtype, enable_f64, make_problem
 from repro.core.solvers import (
     SOLVERS,

@@ -31,9 +31,10 @@ from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.compat import shard_map
+from repro.core.methods import Ops, get_method, run_method
 from repro.core.operators import Stencil, interior_matvec, shell_assemble
 from repro.core.problems import HPCGProblem
-from repro.core.solvers import SOLVERS, SolveResult, _cg_merged_scalars
+from repro.core.solvers import SolveResult
 
 #: halo-exchange strategies of the distributed operator ("auto" resolves to
 #: "concat" here; repro.api.backend upgrades it to "overlap" where safe)
@@ -235,6 +236,13 @@ class DistributedOp:
         into a single MPI_Allreduce)."""
         return self.dotn((a, b), (c, d))
 
+    def sum_partials(self, *vals) -> tuple:
+        """Globally reduce already-computed local partial scalars in ONE
+        collective — the fused Pallas kernels' dot partials (accumulated
+        per block inside the kernel) ride this to become global dots."""
+        stacked = lax.psum(jnp.stack(vals), self.layout.reduce_axes)
+        return tuple(stacked[i] for i in range(len(vals)))
+
 def make_layout(mesh: Mesh, dims_map: dict[str, str | None] | None = None) -> GridLayout:
     """Default layouts per mesh:
 
@@ -255,6 +263,48 @@ def make_layout(mesh: Mesh, dims_map: dict[str, str | None] | None = None) -> Gr
     raise ValueError(f"no default layout for mesh axes {names}")
 
 
+def _local_ops(stencil, layout, b_loc, *, matvec_padded, halo_mode,
+               precond, norm_ref, pallas_fused):
+    """Build the DistributedOp (optionally Pallas-wrapped) + Ops context for
+    one shard_map body — shared by solve_shardmap and solve_step_shardmap."""
+    op = DistributedOp(stencil, layout, matvec_padded=matvec_padded,
+                       halo_mode=halo_mode)
+    if pallas_fused:
+        from repro.kernels.pallas_op import PallasOp
+        op = PallasOp(op)
+    M = precond.bind(op) if precond is not None else None
+    return Ops(op, b_loc, M=M, norm_ref=norm_ref)
+
+
+def _check_method(method: str, precond, pallas_fused: bool,
+                  matvec_padded=None):
+    """Resolve + validate a method name for the distributed drivers.
+
+    Raises a ``ValueError`` listing the known methods for an unregistered
+    name (previously ``solve_step_shardmap`` fell through silently until
+    trace time), and rejects precond/fused requests the definition does not
+    support.
+    """
+    from repro.core.methods import METHODS
+    mdef = get_method(method)          # ValueError w/ known-method list
+    if precond is not None and not mdef.accepts_precond:
+        raise ValueError(
+            f"method {method!r} takes no preconditioner; use one of "
+            f"{sorted(n for n, m in METHODS.items() if m.accepts_precond)}")
+    if pallas_fused and not mdef.has_fused_body:
+        raise ValueError(
+            f"method {method!r} declares no fused kernels; fused methods: "
+            f"{sorted(n for n, m in METHODS.items() if m.has_fused_body)}")
+    if pallas_fused and matvec_padded is not None:
+        # the fused body's SpMVs run the built-in Pallas stencil kernel —
+        # a custom matvec_padded would apply only to the (unfused) initial
+        # residual, i.e. a solve against two different operators
+        raise ValueError(
+            "pallas_fused=True is incompatible with a custom matvec_padded "
+            "(the fused kernels implement the built-in stencil apply)")
+    return mdef
+
+
 def solve_shardmap(
     problem: HPCGProblem,
     method: str,
@@ -267,27 +317,31 @@ def solve_shardmap(
     matvec_padded: Callable | None = None,
     halo_mode: str = "auto",
     precond=None,
+    pallas_fused: bool = False,
 ):
     """Build the shard_map-wrapped distributed solver; returns (fn, in_specs).
 
     ``fn(b, x0) -> SolveResult`` with b/x0 GLOBAL arrays sharded per layout.
-    ``precond`` is a ``repro.precond.Preconditioner`` (or None); it is bound
-    to the DistributedOp *inside* shard_map, so its applies see the local
-    block and the mesh's halo machinery — same write-once rule as the
-    solvers.  Only methods taking an ``M=`` kwarg (pcg/pbicgstab) accept it.
+    The solve is the method's ``MethodDef`` run by the generic
+    ``run_method`` driver over a ``DistributedOp`` — the identical
+    definition the local path executes.  ``precond`` is a
+    ``repro.precond.Preconditioner`` (or None); it is bound to the operator
+    *inside* shard_map, so its applies see the local block and the mesh's
+    halo machinery.  ``pallas_fused=True`` wraps the operator in a
+    ``PallasOp`` and runs the method's fused-kernel body (methods that
+    declare one, e.g. ``cg_merged``) — the fused kernels execute inside
+    the shard_map body, halos and psums included.
     """
+    mdef = _check_method(method, precond, pallas_fused, matvec_padded)
     layout = make_layout(mesh, dims_map)
-    solver = SOLVERS[method]
     stencil = problem.stencil
 
     def local_solve(b_loc: jax.Array, x0_loc: jax.Array) -> SolveResult:
-        op = DistributedOp(stencil, layout, matvec_padded=matvec_padded,
-                           halo_mode=halo_mode)
-        kw = {} if precond is None else {"M": precond.bind(op)}
-        return solver(
-            op, b_loc, x0_loc, tol=tol, maxiter=maxiter,
-            dot=op.dot, norm_ref=norm_ref, **kw,
-        )
+        ops = _local_ops(stencil, layout, b_loc, matvec_padded=matvec_padded,
+                         halo_mode=halo_mode, precond=precond,
+                         norm_ref=norm_ref, pallas_fused=pallas_fused)
+        return run_method(mdef, ops, x0_loc, tol=tol, maxiter=maxiter,
+                          fused=pallas_fused)
 
     spec = layout.spec()
     fn = shard_map(
@@ -299,33 +353,13 @@ def solve_shardmap(
     return fn, layout
 
 
-#: per-method step-state layout for ``solve_step_shardmap``: (vector slot
-#: names, scalar slot names), EXCLUDING the leading ``b``.  The paper's
-#: methods share the historical (x, r, p, Ap) × (an, ad) layout (slots are
-#: reused — e.g. the BiCGStab steps carry r-hat in the Ap slot); the
-#: reduction-hiding variants carry their full recurrence state, which no
-#: longer fits four vectors.  Drivers that lower a step generically
-#: (launch/dryrun, tests) build their argument lists from this table.
-_LEGACY_STEP_STATE = (("x", "r", "p", "Ap"), ("an", "ad"))
-STEP_STATE: dict[str, tuple[tuple[str, ...], tuple[str, ...]]] = {
-    "cg_merged": (("x", "r", "p", "s", "w"),
-                  ("gamma", "delta", "gamma_prev", "alpha_prev")),
-    "pcg_merged": (("x", "r", "u", "p", "s", "w"),
-                   ("gamma", "delta", "rr", "gamma_prev", "alpha_prev")),
-    "cg_pipe": (("x", "r", "w", "p", "s", "z"),
-                ("gamma_prev", "alpha_prev", "rr")),
-    "pcg_pipe": (("x", "r", "u", "w", "p", "s", "q", "z"),
-                 ("gamma_prev", "alpha_prev", "rr")),
-    "bicgstab_merged": (("x", "r", "w", "t", "p", "s", "z", "rhat"),
-                        ("rho", "alpha", "rr")),
-    "pbicgstab_merged": (("x", "r", "w", "t", "p", "s", "z", "rhat"),
-                         ("rho", "alpha", "rr")),
-}
-
-
 def step_state_layout(method: str) -> tuple[tuple[str, ...], tuple[str, ...]]:
-    """(vector slot names, scalar slot names) of a method's step state."""
-    return STEP_STATE.get(method, _LEGACY_STEP_STATE)
+    """(vector slot names, scalar slot names) of a method's step state —
+    derived mechanically from its ``MethodDef`` (the hand-written
+    ``STEP_STATE`` table this replaces is gone; tests assert the derived
+    layouts match the documented ones)."""
+    mdef = get_method(method)
+    return mdef.vectors, mdef.scalars
 
 
 def init_step_state(method: str, A, b, x0, M=None) -> tuple:
@@ -334,51 +368,11 @@ def init_step_state(method: str, A, b, x0, M=None) -> tuple:
     iteration 0 (so one step == one ``lax.while_loop`` body —
     tests/test_step_parity.py).  ``A`` is any LocalOp-protocol operator;
     ``M`` the bound preconditioner apply for the methods that take one.
+    Derived mechanically from the method's ``MethodDef.init``.
     """
-    apply_M = M if M is not None else (lambda v: v)
-    r = b - A.matvec(x0)
-    rr = jnp.vdot(r, r)
-    zero_v = jnp.zeros_like(b)
-    zero = jnp.zeros((), b.dtype)
-    inf = jnp.asarray(jnp.inf, b.dtype)
-    one = jnp.asarray(1.0, b.dtype)
-    if method == "cg_merged":
-        w = A.matvec(r)
-        return (b, x0, r, zero_v, zero_v, w,
-                rr, jnp.vdot(w, r), inf, one)
-    if method == "pcg_merged":
-        u = apply_M(r)
-        w = A.matvec(u)
-        return (b, x0, r, u, zero_v, zero_v, w,
-                jnp.vdot(r, u), jnp.vdot(w, u), rr, inf, one)
-    if method == "cg_pipe":
-        w = A.matvec(r)
-        return (b, x0, r, w, zero_v, zero_v, zero_v, inf, one, rr)
-    if method == "pcg_pipe":
-        u = apply_M(r)
-        w = A.matvec(u)
-        return (b, x0, r, u, w, zero_v, zero_v, zero_v, zero_v,
-                inf, one, rr)
-    if method in ("bicgstab_merged", "pbicgstab_merged"):
-        mv = (A.matvec if method == "bicgstab_merged"
-              else (lambda v: A.matvec(apply_M(v))))
-        y0 = x0 if method == "bicgstab_merged" else zero_v
-        w = mv(r)
-        t = mv(w)
-        rho = jnp.vdot(r, r)               # r̂ = r0
-        alpha = rho / jnp.vdot(r, w)
-        return (b, y0, r, w, t, r, w, t, r, rho, alpha, rho)
-    # --- legacy (x, r, p, Ap) × (an, ad) layout ------------------------------
-    if method == "cg_nb":
-        Ap = A.matvec(r)
-        return (b, x0, r, r, Ap, rr, jnp.vdot(Ap, r))
-    if method == "bicgstab_b1":
-        rhat = r / jnp.sqrt(rr)
-        return (b, x0, r, r, rhat, jnp.vdot(r, rhat), zero)
-    # cg / pcg (p slot = z0; with M=None: z == r, rz == rr), the BiCGStab
-    # pair (Ap slot = r-hat, an slot = rho) and the stationary methods all
-    # start from the same (r, r, r, rr) filling.
-    return (b, x0, r, r, r, rr, zero)
+    mdef = get_method(method)
+    ops = Ops(A, b, M=M, norm_ref=1.0)
+    return (b, *mdef.init(ops, x0))
 
 
 def solve_step_shardmap(
@@ -390,221 +384,37 @@ def solve_step_shardmap(
     matvec_padded: Callable | None = None,
     halo_mode: str = "auto",
     precond=None,
+    pallas_fused: bool = False,
 ):
     """One *iteration* of the solver as a standalone shard_mapped function.
 
     Used by the dry-run/roofline: lowering a single iteration makes
     ``cost_analysis`` exact (no while-loop trip-count ambiguity) and exposes
     the per-iteration collective schedule for the overlap analysis.  The
-    state signature is ``(b, *vectors, *scalars)`` per
-    :func:`step_state_layout` (method-dependent for the reduction-hiding
-    variants); :func:`init_step_state` builds a matching initial tuple.
+    body IS the method's ``MethodDef.step`` (no per-method dispatch here);
+    the state signature is ``(b, *vectors, *scalars)`` per
+    :func:`step_state_layout` and :func:`init_step_state` builds a matching
+    initial tuple.  Unknown method names raise a ``ValueError`` listing the
+    registry (they previously fell through to a trace-time error).
+    ``pallas_fused=True`` lowers the fused-kernel body instead.
     """
+    mdef = _check_method(method, precond, pallas_fused, matvec_padded)
     layout = make_layout(mesh, dims_map)
     stencil = problem.stencil
-    vec_names, scal_names = step_state_layout(method)
+    step = mdef.fused_step if pallas_fused else mdef.step
 
-    def local_step_generic(b_loc, *state):
-        op = DistributedOp(stencil, layout, matvec_padded=matvec_padded,
-                           halo_mode=halo_mode)
-        M = precond.bind(op) if precond is not None else (lambda v: v)
-        if method == "cg_merged":
-            x, r, p, s, w, gamma, delta, gamma_prev, alpha_prev = state
-            alpha, beta = _cg_merged_scalars(gamma, delta, gamma_prev,
-                                             alpha_prev)
-            p = r + beta * p
-            s = w + beta * s
-            x = x + alpha * p
-            r = r - alpha * s
-            w = op.matvec(r)
-            gamma_new, delta_new = op.dotn((r, r), (w, r))  # ONE all-reduce
-            return (x, r, p, s, w, gamma_new, delta_new, gamma, alpha)
-        elif method == "pcg_merged":
-            (x, r, u, p, s, w, gamma, delta, rr,
-             gamma_prev, alpha_prev) = state
-            alpha, beta = _cg_merged_scalars(gamma, delta, gamma_prev,
-                                             alpha_prev)
-            p = u + beta * p
-            s = w + beta * s
-            x = x + alpha * p
-            r = r - alpha * s
-            u = M(r)
-            w = op.matvec(u)
-            gamma_new, delta_new, rr_new = op.dotn((r, u), (w, u), (r, r))
-            return (x, r, u, p, s, w, gamma_new, delta_new, rr_new,
-                    gamma, alpha)
-        elif method == "cg_pipe":
-            x, r, w, p, s, z, gamma_prev, alpha_prev, rr = state
-            gamma, delta = op.dotn((r, r), (w, r))        # issued...
-            n = lax.optimization_barrier(op.matvec(w))    # ...hidden here
-            alpha, beta = _cg_merged_scalars(gamma, delta, gamma_prev,
-                                             alpha_prev)
-            z = n + beta * z
-            s = w + beta * s
-            p = r + beta * p
-            x = x + alpha * p
-            r = r - alpha * s
-            w = w - alpha * z
-            return (x, r, w, p, s, z, gamma, alpha, gamma)
-        elif method == "pcg_pipe":
-            x, r, u, w, p, s, q, z, gamma_prev, alpha_prev, rr = state
-            gamma, delta, rr_new = op.dotn((r, u), (w, u), (r, r))
-            m = M(w)
-            n = lax.optimization_barrier(op.matvec(m))
-            alpha, beta = _cg_merged_scalars(gamma, delta, gamma_prev,
-                                             alpha_prev)
-            z = n + beta * z
-            q = m + beta * q
-            s = w + beta * s
-            p = u + beta * p
-            x = x + alpha * p
-            r = r - alpha * s
-            u = u - alpha * q
-            w = w - alpha * z
-            return (x, r, u, w, p, s, q, z, gamma, alpha, rr_new)
-        elif method in ("bicgstab_merged", "pbicgstab_merged"):
-            mv = (op.matvec if method == "bicgstab_merged"
-                  else (lambda v: op.matvec(M(v))))
-            y, r, w, t, p, s, z, rhat, rho, alpha, rr = state
-            q = r - alpha * s
-            yv = w - alpha * z
-            v = lax.optimization_barrier(mv(z))
-            (qy, yy, qq, rhq, rhy, rht, rhv, rhz, rhs) = op.dotn(
-                (q, yv), (yv, yv), (q, q), (rhat, q), (rhat, yv),
-                (rhat, t), (rhat, v), (rhat, z), (rhat, s))
-            omega = qy / yy
-            y = y + alpha * p + omega * q
-            r = q - omega * yv
-            rr_new = jnp.maximum(
-                qq - 2.0 * omega * qy + omega * omega * yy, 0.0)
-            rho_new = rhq - omega * rhy
-            beta = (rho_new / rho) * (alpha / omega)
-            w = yv - omega * (t - alpha * v)
-            t = mv(w)
-            rhw = rhy - omega * (rht - alpha * rhv)
-            alpha_new = rho_new / (rhw + beta * (rhs - omega * rhz))
-            p = r + beta * (p - omega * s)
-            s = w + beta * (s - omega * z)
-            z = t + beta * (z - omega * v)
-            return (y, r, w, t, p, s, z, rhat, rho_new, alpha_new, rr_new)
-        x_loc, r_loc, p_loc, Ap_loc, an, ad = state
-        if method == "cg":
-            Ap = op.matvec(p_loc)
-            pAp = op.dot(p_loc, Ap)
-            alpha = an / pAp
-            x = x_loc + alpha * p_loc
-            r = r_loc - alpha * Ap
-            rr = op.dot(r, r)
-            beta = rr / an
-            p = r + beta * p_loc
-            return x, r, p, Ap, rr, pAp
-        elif method == "cg_nb":
-            alpha = an / ad
-            r = r_loc - alpha * Ap_loc
-            an_new = op.dot(r, r)
-            Ar = op.matvec(r)
-            beta = an_new / an
-            Ap = Ar + beta * Ap_loc
-            p = r + beta * p_loc
-            ad_new = op.dot(Ap, p)
-            x = x_loc + alpha * p_loc
-            return x, r, p, Ap, an_new, ad_new
-        elif method == "jacobi":
-            x = x_loc + r_loc / op.diag
-            r = b_loc - op.matvec(x)
-            rr = op.dot(r, r)
-            return x, r, p_loc, Ap_loc, rr, ad
-        elif method == "pcg":
-            # p slot = p, Ap slot carries z; an slot = rz (with M=None the
-            # state degenerates to cg's: z == r, rz == rr)
-            Ap = op.matvec(p_loc)
-            pAp = op.dot(p_loc, Ap)         # blocking
-            alpha = an / pAp
-            x = x_loc + alpha * p_loc
-            r = r_loc - alpha * Ap
-            z = M(r)
-            rz, rr = op.dot2(r, z, r, r)
-            beta = rz / an
-            p = z + beta * p_loc
-            return x, r, p, z, rz, rr
-        elif method == "bicgstab":
-            # one classical BiCGStab iteration (3 blocking reductions);
-            # the Ap slot carries r-hat for the step driver.
-            rhat = Ap_loc
-            v = op.matvec(p_loc)
-            rhat_v = op.dot(rhat, v)            # barrier 1
-            alpha = an / rhat_v                 # an slot = rho
-            s = r_loc - alpha * v
-            t = op.matvec(s)
-            ts, tt = op.dot2(t, s, t, t)        # barrier 2
-            omega = ts / tt
-            x = x_loc + alpha * p_loc + omega * s
-            r = s - omega * t
-            rho_new, rr = op.dot2(rhat, r, r, r)  # barrier 3
-            beta = (rho_new / an) * (alpha / omega)
-            p = r + beta * (p_loc - omega * v)
-            return x, r, p, rhat, rho_new, rr
-        elif method == "pbicgstab":
-            # right-preconditioned BiCGStab; Ap slot carries r-hat
-            rhat = Ap_loc
-            phat = M(p_loc)
-            v = op.matvec(phat)
-            rhat_v = op.dot(rhat, v)            # barrier 1
-            alpha = an / rhat_v                 # an slot = rho
-            s = r_loc - alpha * v
-            shat = M(s)
-            t = op.matvec(shat)
-            ts, tt = op.dot2(t, s, t, t)        # barrier 2
-            omega = ts / tt
-            x = x_loc + alpha * phat + omega * shat
-            r = s - omega * t
-            rho_new, rr = op.dot2(rhat, r, r, r)  # barrier 3
-            beta = (rho_new / an) * (alpha / omega)
-            p = r + beta * (p_loc - omega * v)
-            return x, r, p, rhat, rho_new, rr
-        elif method == "bicgstab_b1":
-            rhat = Ap_loc  # slot reuse for the step driver
-            Ap = op.matvec(p_loc)
-            adj = op.dot(Ap, rhat)          # the ONE blocking reduction
-            alpha = an / adj
-            s = r_loc - alpha * Ap
-            As = op.matvec(s)
-            ts, tt = op.dot2(As, s, As, As)
-            # keep the overlap payloads un-fused from their reduction
-            # consumers (see solvers.bicgstab_b1)
-            x_half = lax.optimization_barrier(x_loc + alpha * p_loc)
-            omega = ts / tt
-            x = x_half + omega * s
-            r = s - omega * As
-            an_new, brr = op.dot2(r, rhat, r, r)
-            p_half = lax.optimization_barrier(p_loc - omega * Ap)
-            p = r + (an_new / (adj * omega)) * p_half
-            return x, r, p, Ap, an_new, brr
-        elif method == "gauss_seidel":
-            from repro.core.solvers import _plane_sweep
-            x = _plane_sweep(op, b_loc, x_loc, forward=True)
-            x = _plane_sweep(op, b_loc, x, forward=False)  # backward sweep
-            r = b_loc - op.matvec(x)                       # of the FORWARD result
-            rr = op.dot(r, r)
-            return x, r, p_loc, Ap_loc, rr, ad
-        elif method == "gauss_seidel_rb":
-            from repro.core.solvers import _colour_mask, _rb_half_sweep
-            red = _colour_mask(x_loc.shape, 0)
-            black = _colour_mask(x_loc.shape, 1)
-            x = _rb_half_sweep(op, b_loc, x_loc, red)
-            x = _rb_half_sweep(op, b_loc, x, black)
-            x = _rb_half_sweep(op, b_loc, x, black)
-            x = _rb_half_sweep(op, b_loc, x, red)
-            r = b_loc - op.matvec(x)
-            rr = op.dot(r, r)
-            return x, r, p_loc, Ap_loc, rr, ad
-        raise ValueError(f"unknown method {method}")
+    def local_step(b_loc, *state):
+        ops = _local_ops(stencil, layout, b_loc, matvec_padded=matvec_padded,
+                         halo_mode=halo_mode, precond=precond,
+                         norm_ref=1.0, pallas_fused=pallas_fused)
+        return tuple(step(ops, state))
 
     spec = layout.spec()
+    nvec, nscal = len(mdef.vectors), len(mdef.scalars)
     fn = shard_map(
-        local_step_generic,
+        local_step,
         mesh=mesh,
-        in_specs=(spec,) + (spec,) * len(vec_names) + (P(),) * len(scal_names),
-        out_specs=(spec,) * len(vec_names) + (P(),) * len(scal_names),
+        in_specs=(spec,) * (1 + nvec) + (P(),) * nscal,
+        out_specs=(spec,) * nvec + (P(),) * nscal,
     )
     return fn, layout

@@ -1,110 +1,54 @@
-"""The paper's iterative methods (Alg. 1-2 + Jacobi + symmetric Gauss-Seidel).
+"""Solver functions — the callable surface over ``repro.core.methods``.
 
-Every solver is a pure, jittable JAX function built on ``lax.while_loop``.
-They are written against a small operator protocol so the *same* code runs:
+Since PR 5 every algorithm is defined exactly ONCE as a
+``repro.core.methods.MethodDef`` (init/step/finalize + declared state
+layout) and executed by the generic ``run_method`` driver; this module
+derives the familiar solver functions
 
-  * single-device  — ``LocalOp`` (zero-padded halos), and
-  * multi-device   — ``repro.core.distributed.DistributedOp`` (halos via
-    ``lax.ppermute``, reductions via ``lax.psum``) inside ``shard_map``.
+    cg(A, b, x0, *, tol=1e-6, maxiter=500, dot=None, norm_ref=None)
 
-That mirrors the paper's design where the algorithm is written once and the
-parallelisation (MPI / MPI+tasks) is swapped underneath.
+from those definitions, so existing callers (and the paper-faithful
+``SOLVERS`` / ``VARIANT_OF`` tables) keep working unchanged.  The same
+definitions drive ``core.distributed.solve_shardmap`` /
+``solve_step_shardmap`` and the fused Pallas path — the paper's design
+where the algorithm is written once and the parallelisation (MPI /
+MPI+tasks) is swapped underneath.
 
-Barrier structure reproduced from the paper (§3.1, Fig. 1):
+``LocalOp`` is the single-device operator (zero-padded halos == physical
+boundary); its distributed counterpart is
+``repro.core.distributed.DistributedOp`` (halos via ``lax.ppermute``,
+reductions via ``lax.psum``) — both satisfy the operator protocol the
+method definitions are written against.
 
-  * ``cg``            — 2 blocking reductions / iteration.
-  * ``cg_nb``         — Alg. 1: the SpMV is applied to ``r`` so ``A·p`` becomes a
-                        vector update; both reductions leave the critical path
-                        (the ``r·r`` reduction overlaps the SpMV, the ``Ap·p``
-                        reduction overlaps the lagged ``x`` update).  NOTE:
-                        Alg. 1 line 9 is implemented with the sign convention
-                        that keeps ``x_j = x_{j-1} + α_{j-1} p_{j-1}`` (the
-                        printed minus sign is a typo — with it the recursion
-                        contradicts line 4).  Equivalence with classical CG is
-                        asserted by tests/test_solvers.py.
-  * ``bicgstab``      — 3 blocking reductions / iteration.
-  * ``bicgstab_b1``   — Alg. 2: ω's reductions overlap the ``x_{j+1/2}`` update,
-                        the ``α_n``/``β`` reductions overlap the ``p_{j+1/2}``
-                        update; one blocking reduction (``α_d``) remains.
-                        Includes the restart procedure (lines 13-15).
-  * ``jacobi``        — 1 reduction (the residual norm).
-  * ``sym_gauss_seidel_relaxed`` — the paper's *relaxed* tasked GS adapted to
-                        TPU: GS-fresh across z-planes inside a block, stale
-                        across blocks (the role the benign data races play in
-                        the paper's Code 4).
-  * ``sym_gauss_seidel_rb``      — red-black coloured symmetric GS (§3.4).
-
-Beyond the paper (PR 3): ``pcg`` / ``pbicgstab`` are the preconditioned
-forms of the classical methods, written against the same operator protocol
-plus one extra hook — ``M``, the bound ``z = M^{-1} r`` apply built by
-``repro.precond`` (point-Jacobi, block-Jacobi, SSOR, Chebyshev).  With
-``M=None`` they reduce arithmetically to ``cg`` / ``bicgstab``; convergence
-is always judged on the TRUE residual so iteration counts stay comparable
-across preconditioners.
-
-Beyond the paper (PR 4) — reduction-hiding variants.  The paper's Alg. 1/2
-move reductions *off the critical path* but keep one ``psum`` per dot
-product; at scale the per-collective latency itself dominates.  Two further
-restructurings (both classical, see Chronopoulos & Gear 1989, Ghysels &
-Vanroose 2014, Cools & Vanroose 2017):
-
-  * ``cg_merged`` / ``pcg_merged``       — Chronopoulos–Gear CG: the SpMV is
-                        applied to ``r`` (``w = A r``) and ``p·Ap`` is
-                        recovered from the Saad recurrence
-                        ``α = γ/(δ − βγ/α_prev)`` with ``γ = r·u``,
-                        ``δ = w·u``, so ALL dot products of an iteration
-                        stack into ONE ``psum``.
-  * ``bicgstab_merged`` / ``pbicgstab_merged`` — single-reduction BiCGStab:
-                        auxiliary recurrences for ``s = A p``, ``z = A s``,
-                        ``w = A r``, ``t = A w`` let every scalar an
-                        iteration needs (ω's pair, ρ, ‖r‖² and the α
-                        denominator) be formed from NINE dots on vectors
-                        already available *before* ω — one stacked ``psum``
-                        per iteration (cf. Cools–Vanroose p-BiCGStab).
-                        ``pbicgstab_merged`` runs the same core on the
-                        right-preconditioned operator ``B = A∘M⁻¹`` with a
-                        zero initial guess and recovers ``x = x0 + M⁻¹ y``
-                        once at the end (the residual is unchanged by right
-                        preconditioning, so stopping stays TRUE-residual).
-  * ``cg_pipe`` / ``pcg_pipe``           — Ghysels–Vanroose pipelined CG:
-                        the merged reduction is issued at the TOP of the
-                        body and the SpMV of the same body (``n = A M w``,
-                        on carried state) is dataflow-independent of it, so
-                        the latency-hiding scheduler runs the SpMV while
-                        the ``psum`` is in flight (the same
-                        ``optimization_barrier`` idiom as ``bicgstab_b1``).
-                        The price: the convergence check lags one iteration
-                        (the freshest ‖r‖ is the previous body's) and two
-                        (four, preconditioned) extra vector recurrences.
-
-Numerical caveat: the merged/pipelined forms replace ``p·Ap`` (and, for
-BiCGStab, ‖r‖²) with recurrences; rounding makes them drift from the
-classics by O(ε·κ) per iteration, which can cost a few extra iterations
-near tight tolerances (asserted ≤ +10% by tests/test_reduction_hiding.py)
-and puts an O(ε·κ·‖b‖) floor on the attainable residual — in float32 the
-pipelined/merged-BiCGStab variants stall near ``1e-6·‖b‖``, so solve in
-f64 (the paper's setting) for tight absolute tolerances.
-The returned ``res_norm`` is each method's own estimate, like the classics.
+The algorithmic commentary (barrier structure per §3.1/Fig. 1, the Alg. 1
+sign-convention note, the reduction-hiding recurrences and their numerical
+caveats) lives with the definitions in ``repro.core.methods``.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Callable, NamedTuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
+from repro.core import methods as _methods
+from repro.core.methods import (  # noqa: F401  (compat re-exports)
+    METHODS,
+    MethodDef,
+    Ops,
+    SolveResult,
+    _cg_merged_scalars,
+    _colour_mask,
+    _default_dot,
+    _hist_init,
+    _plane_sweep,
+    _rb_half_sweep,
+    _stacked_dot,
+    get_method,
+    run_method,
+)
 from repro.core.operators import Stencil
-
-
-class SolveResult(NamedTuple):
-    x: jax.Array
-    iters: jax.Array          # number of completed iterations
-    res_norm: jax.Array       # final ||r||_2 (method's own residual estimate)
-    history: jax.Array        # (maxiter+1,) residual-norm history, NaN-padded
 
 
 class LocalOp:
@@ -134,731 +78,60 @@ class LocalOp:
         fuse); ``DistributedOp.dotn`` is the one-psum version."""
         return tuple(jnp.vdot(a, b) for a, b in pairs)
 
+    def sum_partials(self, *vals) -> tuple:
+        """Reduce already-computed local partial scalars globally — locally
+        the identity (``DistributedOp.sum_partials`` is the one-psum
+        version); the fused kernels' dot partials ride this."""
+        return vals
 
-def _default_dot(a: jax.Array, b: jax.Array) -> jax.Array:
-    return jnp.vdot(a, b)
 
-
-def _stacked_dot(A, dot):
-    """The fused-reduction hook of the merged/pipelined variants.
-
-    Returns ``dotn(*pairs) -> tuple`` computing every pair in ONE global
-    reduction.  When the caller passes the operator's own ``dot`` (or none),
-    the operator's ``dotn`` is used — ``DistributedOp.dotn`` stacks the
-    partials into a single ``psum``, which is the whole point of the merged
-    variants.  A foreign ``dot`` override (``SolverOptions.dot``) falls back
-    to per-pair calls, preserving its semantics at the cost of the fusion.
+def make_solver(name: str) -> Callable:
+    """The classic ``solver(A, b, x0, *, tol, maxiter, dot, norm_ref, ...)``
+    callable for one registered MethodDef (plus ``M=`` for the
+    preconditioned methods and the definition's declared tuning knobs —
+    e.g. ``eps_restart=`` for bicgstab_b1 — threaded through
+    ``Ops.params``).  This is the ``fn`` a registry entry for a new method
+    should point at (docs/API.md §"Authoring a new method").
     """
-    if dot is None or getattr(dot, "__self__", None) is A:
-        dn = getattr(A, "dotn", None)
-        if dn is not None:
-            return dn
-    d = dot or _default_dot
-
-    def dotn(*pairs):
-        return tuple(d(a, b) for a, b in pairs)
-
-    return dotn
-
-
-def _prepare(A, b, dot, norm_ref, tol):
-    dot = dot or _default_dot
-    if norm_ref is None:
-        norm_ref = jnp.sqrt(dot(b, b))
-    thresh2 = (tol * norm_ref) ** 2
-    return dot, norm_ref, thresh2
-
-
-def _hist_init(maxiter: int, v0, dtype) -> jax.Array:
-    h = jnp.full((maxiter + 1,), jnp.nan, dtype=dtype)
-    return h.at[0].set(v0.astype(dtype))
-
-
-# =============================================================================
-# Krylov methods
-# =============================================================================
-
-def cg(A, b, x0, *, tol=1e-6, maxiter=500, dot=None, norm_ref=None) -> SolveResult:
-    """Classical conjugate gradient (HPCCG reference; 2 blocking reductions)."""
-    dot, _, thresh2 = _prepare(A, b, dot, norm_ref, tol)
-    r = b - A.matvec(x0)
-    p = r
-    rr = dot(r, r)
-    hist = _hist_init(maxiter, jnp.sqrt(rr), b.dtype)
-
-    def cond(c):
-        _, _, _, rr, k, _ = c
-        return (rr >= thresh2) & (k < maxiter)
-
-    def body(c):
-        x, r, p, rr, k, hist = c
-        Ap = A.matvec(p)
-        pAp = dot(p, Ap)              # blocking: feeds alpha immediately
-        alpha = rr / pAp
-        x = x + alpha * p
-        r = r - alpha * Ap
-        rr_new = dot(r, r)            # blocking: feeds beta before next SpMV
-        beta = rr_new / rr
-        p = r + beta * p
-        hist = hist.at[k + 1].set(jnp.sqrt(rr_new).astype(hist.dtype))
-        return (x, r, p, rr_new, k + 1, hist)
-
-    x, r, p, rr, k, hist = lax.while_loop(cond, body, (x0, r, p, rr, 0, hist))
-    return SolveResult(x=x, iters=k, res_norm=jnp.sqrt(rr), history=hist)
-
-
-def cg_nb(A, b, x0, *, tol=1e-6, maxiter=500, dot=None, norm_ref=None) -> SolveResult:
-    """Nonblocking CG (paper Alg. 1).
-
-    The SpMV is applied to ``r_j``; ``A·p_j`` is reconstructed as a vector
-    update (line 6).  Both reductions are off the critical path: the dataflow
-    successor of ``α_n = r·r`` is line 6 which *follows* the SpMV, and the
-    successor of ``α_d`` is the *next* iteration's ``α``, past the lagged
-    ``x`` update (line 9).  Costs (15+n̄)r touched elements vs CG's (12+n̄)r.
-    """
-    dot, _, thresh2 = _prepare(A, b, dot, norm_ref, tol)
-    r = b - A.matvec(x0)
-    p = r
-    Ap = A.matvec(p)
-    an = dot(r, r)
-    ad = dot(Ap, p)
-    hist = _hist_init(maxiter, jnp.sqrt(an), b.dtype)
-
-    def cond(c):
-        _, _, _, _, an, _, k, _ = c
-        return (an >= thresh2) & (k < maxiter)
-
-    def body(c):
-        x, r, p, Ap, an, ad, k, hist = c
-        alpha = an / ad                       # α_{j-1}
-        r_new = r - alpha * Ap                # Tk 0 (line 4)
-        an_new = dot(r_new, r_new)            # Tk 0 (line 5) — reduction in flight...
-        Ar = A.matvec(r_new)                  # ...overlapped with this SpMV
-        beta = an_new / an
-        Ap_new = Ar + beta * Ap               # Tk 1 & 2 (line 6) — no SpMV on p!
-        p_new = r_new + beta * p              # Tk 2 (line 7)
-        ad_new = dot(Ap_new, p_new)           # Tk 2 (line 8) — overlapped with...
-        x = x + alpha * p                     # Tk 3 (line 9, sign-fixed; uses OLD p)
-        hist = hist.at[k + 1].set(jnp.sqrt(an_new).astype(hist.dtype))
-        return (x, r_new, p_new, Ap_new, an_new, ad_new, k + 1, hist)
-
-    x, r, p, Ap, an, ad, k, hist = lax.while_loop(
-        cond, body, (x0, r, p, Ap, an, ad, 0, hist)
-    )
-    # The x update lags one iteration; apply the final correction term.
-    x = x + (an / ad) * p
-    return SolveResult(x=x, iters=k, res_norm=jnp.sqrt(an), history=hist)
-
-
-def pcg(A, b, x0, *, tol=1e-6, maxiter=500, dot=None, norm_ref=None,
-        M=None) -> SolveResult:
-    """Preconditioned CG.
-
-    ``M`` is the bound ``z = M^{-1} r`` apply (``repro.precond``; must be
-    SPD-preserving — the registry's ``spd_preserving`` flag).  ``M=None``
-    is the identity, which makes pcg arithmetically identical to ``cg``.
-    3 reductions/iter: ``p·Ap`` blocks, ``r·z`` blocks (feeds β), ``r·r``
-    only feeds the convergence check and overlaps the next apply.  The
-    check stays on the TRUE residual ``||r||`` (not the M-norm), so
-    iteration counts are comparable with ``cg`` at the same tolerance.
-    """
-    dot, _, thresh2 = _prepare(A, b, dot, norm_ref, tol)
-    apply_M = M if M is not None else (lambda v: v)
-    r = b - A.matvec(x0)
-    z = apply_M(r)
-    p = z
-    rz = dot(r, z)
-    rr = dot(r, r)
-    hist = _hist_init(maxiter, jnp.sqrt(rr), b.dtype)
-
-    def cond(c):
-        _, _, _, _, rr, k, _ = c
-        return (rr >= thresh2) & (k < maxiter)
-
-    def body(c):
-        x, r, p, rz, rr, k, hist = c
-        Ap = A.matvec(p)
-        pAp = dot(p, Ap)              # blocking: feeds alpha immediately
-        alpha = rz / pAp
-        x = x + alpha * p
-        r = r - alpha * Ap
-        z = apply_M(r)
-        rz_new = dot(r, z)            # blocking: feeds beta
-        rr_new = dot(r, r)            # check only: overlaps the next apply
-        beta = rz_new / rz
-        p = z + beta * p
-        hist = hist.at[k + 1].set(jnp.sqrt(rr_new).astype(hist.dtype))
-        return (x, r, p, rz_new, rr_new, k + 1, hist)
-
-    x, r, p, rz, rr, k, hist = lax.while_loop(
-        cond, body, (x0, r, p, rz, rr, 0, hist))
-    return SolveResult(x=x, iters=k, res_norm=jnp.sqrt(rr), history=hist)
-
-
-def _cg_merged_scalars(gamma, delta, gamma_prev, alpha_prev):
-    """β and the Saad-recurrence α of merged/pipelined CG.
-
-    ``α = γ/(δ − βγ/α_prev)`` equals classical CG's ``γ/(p·Ap)`` in exact
-    arithmetic; seeding ``γ_prev = inf, α_prev = 1`` makes the first pass
-    degenerate to ``β = 0, α = γ/δ`` without a cond.
-    """
-    beta = gamma / gamma_prev
-    alpha = gamma / (delta - beta * gamma / alpha_prev)
-    return alpha, beta
-
-
-def cg_merged(A, b, x0, *, tol=1e-6, maxiter=500, dot=None,
-              norm_ref=None) -> SolveResult:
-    """Merged-reduction CG (Chronopoulos–Gear): ONE stacked psum/iteration.
-
-    The SpMV is applied to ``r`` (``w = A r``) and both scalars the
-    iteration needs — ``γ = r·r`` and ``δ = w·r`` — come out of a single
-    stacked reduction; ``p·Ap`` is recovered by the Saad recurrence (see
-    ``_cg_merged_scalars``).  Arithmetically equivalent to ``cg`` (checked
-    by tests/test_reduction_hiding.py), one extra vector recurrence
-    (``s = A p``) of memory traffic.
-    """
-    dotn = _stacked_dot(A, dot)
-    dot, _, thresh2 = _prepare(A, b, dot, norm_ref, tol)
-    r = b - A.matvec(x0)
-    w = A.matvec(r)
-    gamma, delta = dotn((r, r), (w, r))
-    hist = _hist_init(maxiter, jnp.sqrt(gamma), b.dtype)
-    zero = jnp.zeros_like(b)
-    inf = jnp.asarray(jnp.inf, gamma.dtype)
-    one = jnp.asarray(1.0, gamma.dtype)
-
-    def cond(c):
-        _, _, _, _, _, gamma, _, _, _, k, _ = c
-        return (gamma >= thresh2) & (k < maxiter)
-
-    def body(c):
-        x, r, p, s, w, gamma, delta, gamma_prev, alpha_prev, k, hist = c
-        alpha, beta = _cg_merged_scalars(gamma, delta, gamma_prev, alpha_prev)
-        p = r + beta * p
-        s = w + beta * s                  # s = A p by recurrence — no SpMV on p
-        x = x + alpha * p
-        r = r - alpha * s
-        w = A.matvec(r)
-        gamma_new, delta_new = dotn((r, r), (w, r))   # the ONE reduction
-        hist = hist.at[k + 1].set(jnp.sqrt(gamma_new).astype(hist.dtype))
-        return (x, r, p, s, w, gamma_new, delta_new, gamma, alpha, k + 1, hist)
-
-    x, r, p, s, w, gamma, delta, _, _, k, hist = lax.while_loop(
-        cond, body, (x0, r, zero, zero, w, gamma, delta, inf, one, 0, hist))
-    return SolveResult(x=x, iters=k, res_norm=jnp.sqrt(gamma), history=hist)
-
-
-def pcg_merged(A, b, x0, *, tol=1e-6, maxiter=500, dot=None, norm_ref=None,
-               M=None) -> SolveResult:
-    """Merged-reduction preconditioned CG (Chronopoulos–Gear PCG).
-
-    Same recurrence as :func:`cg_merged` with ``u = M⁻¹ r``, ``w = A u``,
-    ``γ = r·u``, ``δ = w·u``; the TRUE-residual ``r·r`` rides in the same
-    stacked reduction (3 scalars, ONE psum), so stopping matches ``pcg``.
-    ``M`` must be SPD-preserving, like ``pcg``'s.
-    """
-    dotn = _stacked_dot(A, dot)
-    dot, _, thresh2 = _prepare(A, b, dot, norm_ref, tol)
-    apply_M = M if M is not None else (lambda v: v)
-    r = b - A.matvec(x0)
-    u = apply_M(r)
-    w = A.matvec(u)
-    gamma, delta, rr = dotn((r, u), (w, u), (r, r))
-    hist = _hist_init(maxiter, jnp.sqrt(rr), b.dtype)
-    zero = jnp.zeros_like(b)
-    inf = jnp.asarray(jnp.inf, gamma.dtype)
-    one = jnp.asarray(1.0, gamma.dtype)
-
-    def cond(c):
-        _, _, _, _, _, _, _, _, rr, _, _, k, _ = c
-        return (rr >= thresh2) & (k < maxiter)
-
-    def body(c):
-        x, r, u, p, s, w, gamma, delta, rr, gamma_prev, alpha_prev, k, hist = c
-        alpha, beta = _cg_merged_scalars(gamma, delta, gamma_prev, alpha_prev)
-        p = u + beta * p
-        s = w + beta * s
-        x = x + alpha * p
-        r = r - alpha * s
-        u = apply_M(r)
-        w = A.matvec(u)
-        gamma_new, delta_new, rr_new = dotn((r, u), (w, u), (r, r))
-        hist = hist.at[k + 1].set(jnp.sqrt(rr_new).astype(hist.dtype))
-        return (x, r, u, p, s, w, gamma_new, delta_new, rr_new,
-                gamma, alpha, k + 1, hist)
-
-    x, r, u, p, s, w, gamma, delta, rr, _, _, k, hist = lax.while_loop(
-        cond, body,
-        (x0, r, u, zero, zero, w, gamma, delta, rr, inf, one, 0, hist))
-    return SolveResult(x=x, iters=k, res_norm=jnp.sqrt(rr), history=hist)
-
-
-def cg_pipe(A, b, x0, *, tol=1e-6, maxiter=500, dot=None,
-            norm_ref=None) -> SolveResult:
-    """Pipelined CG (Ghysels–Vanroose): the ONE stacked reduction is issued
-    at the top of the body and the body's SpMV (``n = A w``, on carried
-    state) is dataflow-independent of it — the latency-hiding scheduler
-    runs the SpMV while the psum is in flight.  The ``optimization_barrier``
-    pins the SpMV as its own schedulable task (the ``bicgstab_b1`` idiom;
-    without it XLA may fuse the stencil apply into the reduction consumers
-    and close the window).
-
-    The freshest residual norm available to ``cond`` is the previous
-    body's, so the method typically reports one more iteration than ``cg``
-    at the same tolerance; two extra vector recurrences (``s = A p``,
-    ``z = A s``) pay for the hiding.
-    """
-    dotn = _stacked_dot(A, dot)
-    dot, _, thresh2 = _prepare(A, b, dot, norm_ref, tol)
-    r = b - A.matvec(x0)
-    w = A.matvec(r)
-    (rr0,) = dotn((r, r))
-    hist = _hist_init(maxiter, jnp.sqrt(rr0), b.dtype)
-    zero = jnp.zeros_like(b)
-    inf = jnp.asarray(jnp.inf, rr0.dtype)
-    one = jnp.asarray(1.0, rr0.dtype)
-
-    def cond(c):
-        _, _, _, _, _, _, _, _, rr, k, _ = c
-        return (rr >= thresh2) & (k < maxiter)
-
-    def body(c):
-        x, r, w, p, s, z, gamma_prev, alpha_prev, rr, k, hist = c
-        gamma, delta = dotn((r, r), (w, r))           # issued...
-        n = lax.optimization_barrier(A.matvec(w))     # ...hidden behind this
-        alpha, beta = _cg_merged_scalars(gamma, delta, gamma_prev, alpha_prev)
-        z = n + beta * z                  # z = A s by recurrence
-        s = w + beta * s                  # s = A p by recurrence
-        p = r + beta * p
-        x = x + alpha * p
-        r = r - alpha * s
-        w = w - alpha * z                 # w = A r by recurrence
-        hist = hist.at[k + 1].set(jnp.sqrt(gamma).astype(hist.dtype))
-        return (x, r, w, p, s, z, gamma, alpha, gamma, k + 1, hist)
-
-    x, r, w, p, s, z, _, _, rr, k, hist = lax.while_loop(
-        cond, body, (x0, r, w, zero, zero, zero, inf, one, rr0, 0, hist))
-    return SolveResult(x=x, iters=k, res_norm=jnp.sqrt(rr), history=hist)
-
-
-def pcg_pipe(A, b, x0, *, tol=1e-6, maxiter=500, dot=None, norm_ref=None,
-             M=None) -> SolveResult:
-    """Pipelined preconditioned CG (Ghysels–Vanroose Alg. 3).
-
-    Like :func:`cg_pipe` with ``u = M⁻¹ r`` maintained by recurrence: the
-    stacked reduction (``γ = r·u``, ``δ = w·u``, TRUE ``r·r`` — ONE psum)
-    overlaps both the preconditioner apply ``m = M⁻¹ w`` and the SpMV
-    ``n = A m``.  Four extra recurrences (``s, q, z, u``); stopping lags one
-    iteration like the unpreconditioned pipeline.
-    """
-    dotn = _stacked_dot(A, dot)
-    dot, _, thresh2 = _prepare(A, b, dot, norm_ref, tol)
-    apply_M = M if M is not None else (lambda v: v)
-    r = b - A.matvec(x0)
-    u = apply_M(r)
-    w = A.matvec(u)
-    (rr0,) = dotn((r, r))
-    hist = _hist_init(maxiter, jnp.sqrt(rr0), b.dtype)
-    zero = jnp.zeros_like(b)
-    inf = jnp.asarray(jnp.inf, rr0.dtype)
-    one = jnp.asarray(1.0, rr0.dtype)
-
-    def cond(c):
-        _, _, _, _, _, _, _, _, _, _, rr, k, _ = c
-        return (rr >= thresh2) & (k < maxiter)
-
-    def body(c):
-        x, r, u, w, p, s, q, z, gamma_prev, alpha_prev, rr, k, hist = c
-        gamma, delta, rr_new = dotn((r, u), (w, u), (r, r))   # issued...
-        m = apply_M(w)                                # ...hidden behind the
-        n = lax.optimization_barrier(A.matvec(m))     # apply and the SpMV
-        alpha, beta = _cg_merged_scalars(gamma, delta, gamma_prev, alpha_prev)
-        z = n + beta * z                  # z = A q by recurrence
-        q = m + beta * q                  # q = M⁻¹ s by recurrence
-        s = w + beta * s                  # s = A p by recurrence
-        p = u + beta * p
-        x = x + alpha * p
-        r = r - alpha * s
-        u = u - alpha * q                 # u = M⁻¹ r by recurrence
-        w = w - alpha * z                 # w = A u by recurrence
-        hist = hist.at[k + 1].set(jnp.sqrt(rr_new).astype(hist.dtype))
-        return (x, r, u, w, p, s, q, z, gamma, alpha, rr_new, k + 1, hist)
-
-    x, r, u, w, p, s, q, z, _, _, rr, k, hist = lax.while_loop(
-        cond, body,
-        (x0, r, u, w, zero, zero, zero, zero, inf, one, rr0, 0, hist))
-    return SolveResult(x=x, iters=k, res_norm=jnp.sqrt(rr), history=hist)
-
-
-def bicgstab(A, b, x0, *, tol=1e-6, maxiter=500, dot=None, norm_ref=None) -> SolveResult:
-    """Classical BiCGStab (3 blocking reductions per iteration)."""
-    dot, _, thresh2 = _prepare(A, b, dot, norm_ref, tol)
-    r = b - A.matvec(x0)
-    rhat = r
-    p = r
-    rho = dot(rhat, r)
-    rr = dot(r, r)
-    hist = _hist_init(maxiter, jnp.sqrt(rr), b.dtype)
-
-    def cond(c):
-        _, _, _, _, rho, rr, k, _ = c
-        return (rr >= thresh2) & (k < maxiter)
-
-    def body(c):
-        x, r, rhat, p, rho, rr, k, hist = c
-        v = A.matvec(p)
-        rhat_v = dot(rhat, v)                 # barrier 1
-        alpha = rho / rhat_v
-        s = r - alpha * v
-        t = A.matvec(s)
-        ts = dot(t, s)                        # barrier 2 (fused pair of dots)
-        tt = dot(t, t)
-        omega = ts / tt
-        x = x + alpha * p + omega * s
-        r = s - omega * t
-        rho_new = dot(rhat, r)                # barrier 3 (fused pair of dots)
-        rr_new = dot(r, r)
-        beta = (rho_new / rho) * (alpha / omega)
-        p = r + beta * (p - omega * v)
-        hist = hist.at[k + 1].set(jnp.sqrt(rr_new).astype(hist.dtype))
-        return (x, r, rhat, p, rho_new, rr_new, k + 1, hist)
-
-    x, r, rhat, p, rho, rr, k, hist = lax.while_loop(
-        cond, body, (x0, r, rhat, p, rho, rr, 0, hist)
-    )
-    return SolveResult(x=x, iters=k, res_norm=jnp.sqrt(rr), history=hist)
-
-
-def pbicgstab(A, b, x0, *, tol=1e-6, maxiter=500, dot=None, norm_ref=None,
-              M=None) -> SolveResult:
-    """Right-preconditioned BiCGStab (``A M^{-1} y = b``, ``x = M^{-1} y``).
-
-    Right preconditioning keeps ``r`` the TRUE residual, so the stopping
-    criterion and iteration counts are directly comparable with
-    ``bicgstab``; ``M`` need not be SPD-preserving.  ``M=None`` reduces
-    arithmetically to classical BiCGStab.  Barrier structure unchanged
-    (3 blocking reduction points) — the two ``M`` applies add stencil
-    sweeps but no reductions for the built-in preconditioners.
-    """
-    dot, _, thresh2 = _prepare(A, b, dot, norm_ref, tol)
-    apply_M = M if M is not None else (lambda v: v)
-    r = b - A.matvec(x0)
-    rhat = r
-    p = r
-    rho = dot(rhat, r)
-    rr = dot(r, r)
-    hist = _hist_init(maxiter, jnp.sqrt(rr), b.dtype)
-
-    def cond(c):
-        _, _, _, _, rho, rr, k, _ = c
-        return (rr >= thresh2) & (k < maxiter)
-
-    def body(c):
-        x, r, rhat, p, rho, rr, k, hist = c
-        phat = apply_M(p)
-        v = A.matvec(phat)
-        rhat_v = dot(rhat, v)                 # barrier 1
-        alpha = rho / rhat_v
-        s = r - alpha * v
-        shat = apply_M(s)
-        t = A.matvec(shat)
-        ts = dot(t, s)                        # barrier 2 (fused pair of dots)
-        tt = dot(t, t)
-        omega = ts / tt
-        x = x + alpha * phat + omega * shat
-        r = s - omega * t
-        rho_new = dot(rhat, r)                # barrier 3 (fused pair of dots)
-        rr_new = dot(r, r)
-        beta = (rho_new / rho) * (alpha / omega)
-        p = r + beta * (p - omega * v)
-        hist = hist.at[k + 1].set(jnp.sqrt(rr_new).astype(hist.dtype))
-        return (x, r, rhat, p, rho_new, rr_new, k + 1, hist)
-
-    x, r, rhat, p, rho, rr, k, hist = lax.while_loop(
-        cond, body, (x0, r, rhat, p, rho, rr, 0, hist)
-    )
-    return SolveResult(x=x, iters=k, res_norm=jnp.sqrt(rr), history=hist)
-
-
-def bicgstab_b1(
-    A, b, x0, *, tol=1e-6, maxiter=500, dot=None, norm_ref=None,
-    eps_restart=1e-5,
-) -> SolveResult:
-    """BiCGStab one-blocking (paper Alg. 2) with the restart procedure.
-
-    Only ``α_d = (A·p)·r'`` blocks; ω's pair of reductions overlaps the
-    ``x_{j+1/2}`` update (Tk 3) and the ``α_n``/``β`` pair overlaps the
-    ``p_{j+1/2}`` update (Tk 5).  Restart (lines 13-15) triggers on
-    ``sqrt(|α_n|) < ε_restart·||b||`` and re-orthogonalises ``r'``,
-    eliminating the near-breakdown amplification (and, in the paper's task
-    world, accumulated nondeterministic rounding).
-    """
-    dot, norm_ref, thresh2 = _prepare(A, b, dot, norm_ref, tol)
-    restart_thresh = eps_restart * norm_ref
-    r = b - A.matvec(x0)
-    p = r
-    beta_rr = dot(r, r)                        # β_0 = r_0·r_0
-    rhat = r / jnp.sqrt(beta_rr)               # r'
-    an = dot(r, rhat)                          # α_{n,0} = sqrt(β_0)
-    hist = _hist_init(maxiter, jnp.sqrt(beta_rr), b.dtype)
-
-    def cond(c):
-        _, _, _, _, an, beta_rr, k, _, _ = c
-        return (beta_rr >= thresh2) & (k < maxiter)     # line 7 check
-
-    def body(c):
-        x, r, p, rhat, an, beta_rr, k, hist, nrestart = c
-        Ap = A.matvec(p)
-        ad = dot(Ap, rhat)                    # Tk 0 (line 3) — the ONE blocking reduction
-        alpha = an / ad
-        s = r - alpha * Ap                    # Tk 1 (line 4)
-        As = A.matvec(s)
-        ts = dot(As, s)                       # Tk 2 (line 5) — overlapped with...
-        tt = dot(As, As)
-        # optimization_barrier = the Tk-3-is-its-own-task constraint: without
-        # it XLA fuses this update into the omega-dependent x_{j+1} and the
-        # overlap window vanishes (measured: slack 4096 -> 0 bytes)
-        x_half = lax.optimization_barrier(x + alpha * p)   # ...Tk 3 (line 6)
-        omega = ts / tt
-        x_new = x_half + omega * s            # Tk 4 (line 8; == line 18 on exit)
-        r_new = s - omega * As                # Tk 4 (line 9)
-        an_new = dot(r_new, rhat)             # Tk 4 (line 10) — overlapped with...
-        beta_rr_new = dot(r_new, r_new)       # Tk 4 (line 11)
-        p_half = lax.optimization_barrier(p - omega * Ap)  # ...Tk 5 (line 12)
-        restart = jnp.sqrt(jnp.abs(an_new)) < restart_thresh
-        p_reg = r_new + (an_new / (ad * omega)) * p_half   # Tk 7 (line 17)
-        p_new = jnp.where(restart, r_new, p_reg)           # Tk 6 (line 14)
-        rhat_new = jnp.where(restart, r_new / jnp.sqrt(beta_rr_new), rhat)  # line 15
-        an_next = jnp.where(restart, jnp.sqrt(beta_rr_new), an_new)
-        hist = hist.at[k + 1].set(jnp.sqrt(beta_rr_new).astype(hist.dtype))
-        return (x_new, r_new, p_new, rhat_new, an_next, beta_rr_new, k + 1,
-                hist, nrestart + restart.astype(jnp.int32))
-
-    x, r, p, rhat, an, beta_rr, k, hist, nrestart = lax.while_loop(
-        cond, body, (x0, r, p, rhat, an, beta_rr, 0, hist, jnp.int32(0))
-    )
-    return SolveResult(x=x, iters=k, res_norm=jnp.sqrt(beta_rr), history=hist)
-
-
-def _bicgstab_merged_loop(matvec, dotn, r0, y0, *, thresh2, maxiter,
-                          hist_dtype):
-    """The single-reduction BiCGStab iteration, shared by the plain and the
-    right-preconditioned form (which passes ``matvec = A∘M⁻¹``).
-
-    Auxiliary images ``w = A r``, ``t = A w``, ``s = A p``, ``z = A s`` are
-    maintained by recurrence so that ω's pair, ρ, the α denominator
-    ``r̂·(A p)`` and ‖r‖² are all linear in dots of vectors available
-    BEFORE ω — nine dots, ONE stacked psum per iteration.  Two SpMVs
-    remain (``v = A z`` and ``t = A w_new``); ``v`` is dataflow-independent
-    of the reduction, so the scheduler can hide the psum behind it (the
-    ``optimization_barrier`` pins it as its own task).
-    """
-    w = matvec(r0)
-    t = matvec(w)
-    rhat = r0
-    rho, rhw = dotn((rhat, r0), (rhat, w))
-    alpha = rho / rhw
-    rr = rho                               # r̂ = r0 ⇒ (r̂,r0) = ‖r0‖²
-    hist = _hist_init(maxiter, jnp.sqrt(rr), hist_dtype)
-
-    def cond(c):
-        rr, k = c[10], c[11]
-        return (rr >= thresh2) & (k < maxiter)
-
-    def body(c):
-        y, r, w, t, p, s, z, rhat, rho, alpha, rr, k, hist = c
-        q = r - alpha * s                  # classical s_j
-        yv = w - alpha * z                 # = A q
-        v = lax.optimization_barrier(matvec(z))      # SpMV 1 — independent...
-        (qy, yy, qq, rhq, rhy, rht, rhv, rhz, rhs) = dotn(   # ...of the ONE
-            (q, yv), (yv, yv), (q, q), (rhat, q), (rhat, yv),  # stacked psum
-            (rhat, t), (rhat, v), (rhat, z), (rhat, s))
-        omega = qy / yy
-        y = y + alpha * p + omega * q
-        r = q - omega * yv
-        # recurrence-based ‖r‖² (the stability caveat in docs/API.md):
-        # ‖q − ωy‖² from pre-update dots; clamp the rounding negatives.
-        rr_new = jnp.maximum(qq - 2.0 * omega * qy + omega * omega * yy, 0.0)
-        rho_new = rhq - omega * rhy
-        beta = (rho_new / rho) * (alpha / omega)
-        w = yv - omega * (t - alpha * v)   # = A r_new
-        t = matvec(w)                      # SpMV 2
-        rhw = rhy - omega * (rht - alpha * rhv)      # (r̂, w_new)
-        alpha_new = rho_new / (rhw + beta * (rhs - omega * rhz))
-        p = r + beta * (p - omega * s)
-        s = w + beta * (s - omega * z)     # = A p_new
-        z = t + beta * (z - omega * v)     # = A s_new
-        hist = hist.at[k + 1].set(jnp.sqrt(rr_new).astype(hist.dtype))
-        return (y, r, w, t, p, s, z, rhat, rho_new, alpha_new, rr_new,
-                k + 1, hist)
-
-    init = (y0, r0, w, t, r0, w, t, rhat, rho, alpha, rr, 0, hist)
-    y, r, w, t, p, s, z, rhat, rho, alpha, rr, k, hist = lax.while_loop(
-        cond, body, init)
-    return y, rr, k, hist
-
-
-def bicgstab_merged(A, b, x0, *, tol=1e-6, maxiter=500, dot=None,
-                    norm_ref=None) -> SolveResult:
-    """Merged-reduction BiCGStab: ONE stacked psum per iteration (vs the
-    classic's 3 barriers), two SpMVs, at the cost of four auxiliary
-    Krylov-image recurrences.  See ``_bicgstab_merged_loop``."""
-    dotn = _stacked_dot(A, dot)
-    dot, _, thresh2 = _prepare(A, b, dot, norm_ref, tol)
-    r0 = b - A.matvec(x0)
-    x, rr, k, hist = _bicgstab_merged_loop(
-        A.matvec, dotn, r0, x0, thresh2=thresh2, maxiter=maxiter,
-        hist_dtype=b.dtype)
-    return SolveResult(x=x, iters=k, res_norm=jnp.sqrt(rr), history=hist)
-
-
-def pbicgstab_merged(A, b, x0, *, tol=1e-6, maxiter=500, dot=None,
-                     norm_ref=None, M=None) -> SolveResult:
-    """Right-preconditioned merged BiCGStab.
-
-    Runs the single-reduction core on ``B = A∘M⁻¹`` with rhs ``r0`` and a
-    ZERO initial guess, then recovers ``x = x0 + M⁻¹ y`` with one final
-    apply — right preconditioning leaves the residual untouched, so the
-    stopping criterion (and iteration counts) stay TRUE-residual like
-    ``pbicgstab``'s, and the per-iteration reduction count stays ONE.
-    ``M`` need not be SPD-preserving.
-    """
-    dotn = _stacked_dot(A, dot)
-    dot, _, thresh2 = _prepare(A, b, dot, norm_ref, tol)
-    apply_M = M if M is not None else (lambda v: v)
-
-    def matvec_B(v):
-        return A.matvec(apply_M(v))
-
-    r0 = b - A.matvec(x0)
-    y, rr, k, hist = _bicgstab_merged_loop(
-        matvec_B, dotn, r0, jnp.zeros_like(b), thresh2=thresh2,
-        maxiter=maxiter, hist_dtype=b.dtype)
-    return SolveResult(x=x0 + apply_M(y), iters=k, res_norm=jnp.sqrt(rr),
-                       history=hist)
-
-
-# =============================================================================
-# Stationary methods
-# =============================================================================
-
-def jacobi(A, b, x0, *, tol=1e-6, maxiter=1000, dot=None, norm_ref=None) -> SolveResult:
-    """Jacobi: x += D^{-1} r; one SpMV + one reduction per iteration."""
-    dot, _, thresh2 = _prepare(A, b, dot, norm_ref, tol)
-    r = b - A.matvec(x0)
-    rr = dot(r, r)
-    hist = _hist_init(maxiter, jnp.sqrt(rr), b.dtype)
-
-    def cond(c):
-        _, _, rr, k, _ = c
-        return (rr >= thresh2) & (k < maxiter)
-
-    def body(c):
-        x, r, rr, k, hist = c
-        x = x + r / A.diag
-        r = b - A.matvec(x)
-        rr = dot(r, r)
-        hist = hist.at[k + 1].set(jnp.sqrt(rr).astype(hist.dtype))
-        return (x, r, rr, k + 1, hist)
-
-    x, r, rr, k, hist = lax.while_loop(cond, body, (x0, r, rr, 0, hist))
-    return SolveResult(x=x, iters=k, res_norm=jnp.sqrt(rr), history=hist)
-
-
-def _plane_sweep(A, b, x, *, forward: bool) -> jax.Array:
-    """One relaxed Gauss-Seidel sweep: GS-fresh across z-planes, Jacobi within
-    a plane, stale across device blocks (halos exchanged once per sweep)."""
-    nz = x.shape[2]
-
-    def step(i, xp):
-        k = i if forward else nz - 1 - i
-        off = A.stencil.plane_offdiag_apply(xp, k)
-        plane = (b[:, :, k] - off) / A.diag
-        return lax.dynamic_update_slice(xp, plane[:, :, None], (1, 1, k + 1))
-
-    xp = A.pad_exchange(x)
-    xp = lax.fori_loop(0, nz, step, xp)
-    return xp[1:-1, 1:-1, 1:-1]
-
-
-def sym_gauss_seidel_relaxed(
-    A, b, x0, *, tol=1e-6, maxiter=1000, dot=None, norm_ref=None
-) -> SolveResult:
-    """Relaxed symmetric GS (paper §3.4 Code 4, TPU adaptation).
-
-    Forward sweep (ascending z-planes) then backward sweep (descending), each
-    using the freshest available plane values — the deterministic analogue of
-    the paper's benign data races that "mimic the Gauss-Seidel behaviour".
-    """
-    dot, _, thresh2 = _prepare(A, b, dot, norm_ref, tol)
-    r = b - A.matvec(x0)
-    rr = dot(r, r)
-    hist = _hist_init(maxiter, jnp.sqrt(rr), b.dtype)
-
-    def cond(c):
-        _, rr, k, _ = c
-        return (rr >= thresh2) & (k < maxiter)
-
-    def body(c):
-        x, rr, k, hist = c
-        x = _plane_sweep(A, b, x, forward=True)
-        x = _plane_sweep(A, b, x, forward=False)
-        r = b - A.matvec(x)
-        rr = dot(r, r)
-        hist = hist.at[k + 1].set(jnp.sqrt(rr).astype(hist.dtype))
-        return (x, rr, k + 1, hist)
-
-    x, rr, k, hist = lax.while_loop(cond, body, (x0, rr, 0, hist))
-    return SolveResult(x=x, iters=k, res_norm=jnp.sqrt(rr), history=hist)
-
-
-def _colour_mask(shape: tuple[int, int, int], colour: int) -> jax.Array:
-    i = lax.broadcasted_iota(jnp.int32, shape, 0)
-    j = lax.broadcasted_iota(jnp.int32, shape, 1)
-    k = lax.broadcasted_iota(jnp.int32, shape, 2)
-    return ((i + j + k) % 2) == colour
-
-
-def _rb_half_sweep(A, b, x, colour_mask) -> jax.Array:
-    off = A.stencil.offdiag_apply_padded(A.pad_exchange(x))
-    return jnp.where(colour_mask, (b - off) / A.diag, x)
-
-
-def sym_gauss_seidel_rb(
-    A, b, x0, *, tol=1e-6, maxiter=1000, dot=None, norm_ref=None
-) -> SolveResult:
-    """Red-black coloured symmetric GS (paper §3.4).
-
-    Forward = red, black; backward = black, red.  Exact GS reordering for the
-    7-pt stencil (bipartite); a coloured relaxation for the 27-pt one, with
-    correspondingly different convergence (the effect the paper measures).
-    """
-    dot, _, thresh2 = _prepare(A, b, dot, norm_ref, tol)
-    red = _colour_mask(x0.shape, 0)
-    black = _colour_mask(x0.shape, 1)
-    r = b - A.matvec(x0)
-    rr = dot(r, r)
-    hist = _hist_init(maxiter, jnp.sqrt(rr), b.dtype)
-
-    def cond(c):
-        _, rr, k, _ = c
-        return (rr >= thresh2) & (k < maxiter)
-
-    def body(c):
-        x, rr, k, hist = c
-        x = _rb_half_sweep(A, b, x, red)      # forward
-        x = _rb_half_sweep(A, b, x, black)
-        x = _rb_half_sweep(A, b, x, black)    # backward
-        x = _rb_half_sweep(A, b, x, red)
-        r = b - A.matvec(x)
-        rr = dot(r, r)
-        hist = hist.at[k + 1].set(jnp.sqrt(rr).astype(hist.dtype))
-        return (x, rr, k + 1, hist)
-
-    x, rr, k, hist = lax.while_loop(cond, body, (x0, rr, 0, hist))
-    return SolveResult(x=x, iters=k, res_norm=jnp.sqrt(rr), history=hist)
-
+    mdef = get_method(name)
+
+    def solver(A, b, x0, *, tol=1e-6, maxiter=None, dot=None, norm_ref=None,
+               M=None, **params) -> SolveResult:
+        if M is not None and not mdef.accepts_precond:
+            raise TypeError(f"{name!r} takes no preconditioner (M=)")
+        unknown = set(params) - set(mdef.params)
+        if unknown:
+            raise TypeError(
+                f"{name}() got unexpected keyword argument(s) "
+                f"{sorted(unknown)}; this method accepts "
+                f"{sorted(mdef.params) or 'no extra parameters'}")
+        ops = Ops(A, b, M=M, dot=dot, norm_ref=norm_ref, params=params)
+        return run_method(mdef, ops, x0, tol=tol, maxiter=maxiter)
+
+    solver.__name__ = name
+    solver.__qualname__ = name
+    solver.__doc__ = (mdef.step.__doc__ or "") + (
+        "\n\n(Defined once in repro.core.methods; this callable runs the "
+        "definition on the local/LocalOp protocol via run_method.)")
+    solver.method_def = mdef
+    return solver
+
+
+cg = make_solver("cg")
+cg_nb = make_solver("cg_nb")
+pcg = make_solver("pcg")
+cg_merged = make_solver("cg_merged")
+pcg_merged = make_solver("pcg_merged")
+cg_pipe = make_solver("cg_pipe")
+pcg_pipe = make_solver("pcg_pipe")
+bicgstab = make_solver("bicgstab")
+pbicgstab = make_solver("pbicgstab")
+bicgstab_b1 = make_solver("bicgstab_b1")
+bicgstab_merged = make_solver("bicgstab_merged")
+pbicgstab_merged = make_solver("pbicgstab_merged")
+jacobi = make_solver("jacobi")
+sym_gauss_seidel_relaxed = make_solver("gauss_seidel")
+sym_gauss_seidel_rb = make_solver("gauss_seidel_rb")
 
 SOLVERS: dict[str, Callable] = {
     "jacobi": jacobi,
@@ -878,13 +151,7 @@ SOLVERS: dict[str, Callable] = {
     "pbicgstab_merged": pbicgstab_merged,
 }
 
-#: methods refining a classical baseline (the paper's variants + the
-#: preconditioned forms + the PR-4 reduction-hiding restructurings)
-#: mapped to that baseline
-VARIANT_OF = {"cg_nb": "cg", "bicgstab_b1": "bicgstab",
-              "gauss_seidel": "gauss_seidel_rb",
-              "pcg": "cg", "pbicgstab": "bicgstab",
-              "cg_merged": "cg", "cg_pipe": "cg",
-              "pcg_merged": "pcg", "pcg_pipe": "pcg",
-              "bicgstab_merged": "bicgstab",
-              "pbicgstab_merged": "pbicgstab"}
+#: methods refining a classical baseline mapped to that baseline — derived
+#: from the MethodDefs (single source); the registry cross-checks it.
+VARIANT_OF = {name: m.variant_of for name, m in METHODS.items()
+              if m.variant_of is not None}

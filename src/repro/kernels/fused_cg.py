@@ -1,18 +1,20 @@
 """Merged-reduction CG driven entirely by the fused Pallas kernels.
 
-``core.solvers.cg_merged`` restructures CG so each iteration is (a) four
-vector updates and (b) one SpMV + two dots; this module backs BOTH halves
-with single-pass kernels:
+The fused iteration is no longer a hand-written loop: it is the
+``cg_merged`` ``MethodDef``'s *fused body* (``repro.core.methods``),
+executed by the same generic ``run_method`` driver as every other
+backend, over a :class:`repro.kernels.pallas_op.PallasOp`:
 
-    x, r, p, s = fused_cg_body(α, β, x, r, p, s, w)        # 1 HBM pass
-    w, δ, γ    = stencil_spmv_dots(pad(r))                 # 1 HBM pass
+    x, r, p, s = A.cg_body(α, β, x, r, p, s, w)        # 1 HBM pass
+    w, δ, γ    = A.spmv_dots(r)                        # 1 HBM pass
 
 Two passes per iteration versus the classic CG's five-to-six separate
 kernel sweeps (SpMV, p·Ap, x-update, r-update, r·r, p-update) — the
 kernel-switch fork-join barriers the paper's §3.3 task merging removes,
 eliminated here as HBM round trips.  ``benchmarks/bench_kernels.py``
-measures exactly this pairing; ``repro.api`` routes
-``method="cg_merged", pallas=True`` single-device solves here.
+measures exactly this pairing; ``repro.api`` routes ``pallas=True`` solves
+of any fused-capable method here (and to the shard_map equivalent on a
+mesh — see ``core.distributed.solve_shardmap(pallas_fused=True)``).
 
 Numerics: identical recurrence to ``cg_merged``; the fused dot partials
 accumulate per z-slab instead of in jnp's reduction order, so iterates
@@ -23,12 +25,11 @@ agree to machine precision but not bit-for-bit
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
-from jax import lax
 
+from repro.core.methods import Ops, SolveResult, get_method, run_method
 from repro.core.operators import Stencil
-from repro.core.solvers import SolveResult, _cg_merged_scalars, _hist_init
-from repro.kernels import ops
+from repro.core.solvers import LocalOp
+from repro.kernels.pallas_op import PallasOp
 
 
 def cg_merged_fused(stencil: Stencil, b: jax.Array, x0: jax.Array, *,
@@ -40,30 +41,7 @@ def cg_merged_fused(stencil: Stencil, b: jax.Array, x0: jax.Array, *,
     Same signature semantics as the ``core.solvers`` methods (``norm_ref``
     ``None`` = relative to ``‖b‖``); jit-safe.
     """
-    if norm_ref is None:
-        norm_ref = jnp.sqrt(jnp.vdot(b, b))
-    thresh2 = (tol * norm_ref) ** 2
-    r = b - stencil.matvec(x0)
-    w, delta, gamma = ops.spmv_dots(jnp.pad(r, 1), stencil, bz=bz)
-    hist = _hist_init(maxiter, jnp.sqrt(gamma), b.dtype)
-    zero = jnp.zeros_like(b)
-    inf = jnp.asarray(jnp.inf, gamma.dtype)
-    one = jnp.asarray(1.0, gamma.dtype)
-
-    def cond(c):
-        gamma, k = c[5], c[9]
-        return (gamma >= thresh2) & (k < maxiter)
-
-    def body(c):
-        x, r, p, s, w, gamma, delta, gamma_prev, alpha_prev, k, hist = c
-        alpha, beta = _cg_merged_scalars(gamma, delta, gamma_prev, alpha_prev)
-        x, r, p, s = ops.cg_body(alpha, beta, x, r, p, s, w)   # pass 1
-        w, delta_new, gamma_new = ops.spmv_dots(                # pass 2
-            jnp.pad(r, 1), stencil, bz=bz)
-        hist = hist.at[k + 1].set(jnp.sqrt(gamma_new).astype(hist.dtype))
-        return (x, r, p, s, w, gamma_new, delta_new, gamma, alpha, k + 1,
-                hist)
-
-    x, r, p, s, w, gamma, delta, _, _, k, hist = lax.while_loop(
-        cond, body, (x0, r, zero, zero, w, gamma, delta, inf, one, 0, hist))
-    return SolveResult(x=x, iters=k, res_norm=jnp.sqrt(gamma), history=hist)
+    A = PallasOp(LocalOp(stencil), bz=bz)
+    ops = Ops(A, b, norm_ref=norm_ref)
+    return run_method(get_method("cg_merged"), ops, x0, tol=tol,
+                      maxiter=maxiter, fused=True)

@@ -1,0 +1,83 @@
+"""``PallasOp``: the LocalOp-protocol operator backed by the fused kernels.
+
+Before PR 5 the fused Pallas iteration (``fused_cg_body`` + ``spmv_dots``)
+was a local-only special case hard-wired to ``cg_merged`` in the facade.
+``PallasOp`` turns it into a *backend*: it wraps any operator satisfying the
+``LocalOp`` protocol (``LocalOp`` itself, or a ``DistributedOp`` inside a
+``shard_map`` body) and supplies
+
+  * the protocol surface (``matvec``/``matvec_local``/``pad_exchange``/
+    ``diag``/``dot``/``dotn``) with the stencil apply running on the Pallas
+    SpMV kernel, and
+  * the fused-iteration hooks the ``MethodDef.fused_step`` bodies are
+    written against — ``cg_body`` (all four merged-CG vector updates, one
+    VMEM pass) and ``spmv_dots`` (SpMV + both dot partials, one VMEM pass).
+
+Halo exchange comes from the wrapped operator (``jnp.pad`` locally,
+ppermutes on a mesh) and the fused kernels' locally-accumulated dot
+partials are made global through the wrapped operator's ``sum_partials``
+(identity locally, ONE stacked psum on a mesh) — so the same fused method
+body executes single-device and inside shard_map, which is how
+``cg_merged`` + ``pallas=True`` now runs distributed.
+
+The preconditioner fused kernels (``cheb_fused_step``, ``block_jacobi_sweep``)
+ride the same wrapper: ``repro.precond`` binds against the PallasOp like any
+other operator, so ``use_pallas`` preconditioners compose with the fused
+solvers inside shard_map too.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+class PallasOp:
+    """Pallas-kernel execution of a wrapped LocalOp-protocol operator."""
+
+    def __init__(self, base, *, bz: int = 8):
+        self.base = base
+        self.stencil = base.stencil
+        self.bz = bz
+
+    @property
+    def diag(self) -> float:
+        return self.base.diag
+
+    # --- protocol surface (halos/reductions delegate to the wrapped op) ------
+    def pad_exchange(self, x: jax.Array) -> jax.Array:
+        return self.base.pad_exchange(x)
+
+    def matvec(self, x: jax.Array) -> jax.Array:
+        return ops.spmv(self.pad_exchange(x), self.stencil, bz=self.bz)
+
+    def matvec_local(self, x: jax.Array) -> jax.Array:
+        return ops.spmv(jnp.pad(x, 1), self.stencil, bz=self.bz)
+
+    @property
+    def dot(self):
+        d = getattr(self.base, "dot", None)
+        return d if d is not None else jnp.vdot
+
+    def dotn(self, *pairs) -> tuple:
+        return self.base.dotn(*pairs)
+
+    def sum_partials(self, *vals) -> tuple:
+        return self.base.sum_partials(*vals)
+
+    # --- fused-iteration hooks (what MethodDef.fused_step is written against)
+    def spmv_dots(self, x: jax.Array) -> tuple:
+        """``(A·x, (A·x)·x, x·x)`` in one VMEM pass; the two dot partials are
+        accumulated per local block inside the kernel and reduced globally
+        through the wrapped operator (one stacked psum on a mesh)."""
+        w, delta, gamma = ops.spmv_dots(self.pad_exchange(x), self.stencil,
+                                        bz=self.bz)
+        delta, gamma = self.sum_partials(delta, gamma)
+        return w, delta, gamma
+
+    def cg_body(self, alpha, beta, x, r, p, s, w) -> tuple:
+        """Merged-CG's four vector updates in one VMEM pass (shard-local —
+        no communication, so it needs no wrapping)."""
+        return ops.cg_body(alpha, beta, x, r, p, s, w)

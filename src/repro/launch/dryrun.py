@@ -423,8 +423,10 @@ def main() -> None:
                 traceback.print_exc()
 
     if args.solvers:
-        for method in ("jacobi", "gauss_seidel", "cg", "cg_nb", "bicgstab",
-                       "bicgstab_b1"):
+        # every registered method — the registry is the single source; new
+        # MethodDefs show up here (and in the benchmarks) automatically
+        from repro.api.registry import solver_names
+        for method in solver_names():
             for stencil in ("7pt", "27pt"):
                 for mk in meshes:
                     tag = f"hpcg-{method}-{stencil}_{mk}"

@@ -35,7 +35,8 @@ from jax.sharding import NamedSharding
 from repro.core.compat import make_mesh
 from repro.core.problems import make_problem
 from repro.core.solvers import SOLVERS, LocalOp
-from repro.core.distributed import solve_shardmap, solve_step_shardmap
+from repro.core.distributed import (solve_shardmap, solve_step_shardmap,
+                                    step_state_layout)
 from repro.analysis.hlo import overlap_slack, count_collectives
 
 view = os.environ.get("TRACE_VIEW", "main")
@@ -66,7 +67,9 @@ for m in ("cg", "cg_nb", "bicgstab", "bicgstab_b1"):
     fn, layout = solve_step_shardmap(prob, m, mesh, halo_mode="scatter",
                                      matvec_padded=prob.stencil.matvec_padded)
     sh = NamedSharding(mesh, layout.spec())
-    args = [jax.device_put(b, sh)] * 5 + [jnp.array(1.0), jnp.array(1.0)]
+    vecs, scals = step_state_layout(m)   # derived from the MethodDef
+    args = ([jax.device_put(b, sh)] * (1 + len(vecs))
+            + [jnp.array(1.0)] * len(scals))
     txt = jax.jit(fn).lower(*args).compile().as_text()
     if view == "main":
         out[m + "_step"] = dict(counts=count_collectives(txt))

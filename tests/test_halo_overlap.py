@@ -40,7 +40,8 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from repro.core.compat import make_mesh
 from repro.core.problems import make_problem
-from repro.core.distributed import solve_shardmap, solve_step_shardmap
+from repro.core.distributed import (solve_shardmap, solve_step_shardmap,
+                                    step_state_layout)
 from repro.analysis.hlo import overlap_slack
 from repro.core.overlap import blocking_halos, halo_slack
 
@@ -77,9 +78,11 @@ else:  # slack view: fusion disabled by the parent via XLA_FLAGS
     b = prob.b()
     vec_bytes = 16 * 16 * (32 // 8) * 8        # one local f64 vector
     for hm in ("concat", "overlap"):
+        vecs, scals = step_state_layout("cg")   # derived from the MethodDef
         fn, layout = solve_step_shardmap(prob, "cg", mesh, halo_mode=hm)
         sh = NamedSharding(mesh, layout.spec())
-        args = [jax.device_put(b, sh)] * 5 + [jnp.array(1.0)] * 2
+        args = ([jax.device_put(b, sh)] * (1 + len(vecs))
+                + [jnp.array(1.0)] * len(scals))
         txt = jax.jit(fn).lower(*args).compile().as_text()
         rep = halo_slack(overlap_slack(txt, ops=("collective-permute",)))
         out[f"slack_{hm}"] = dict(

@@ -143,6 +143,38 @@ def test_fused_cg_merged_facade_path():
                                rtol=1e-12, atol=1e-12)
 
 
+def test_fused_cg_merged_runs_under_shard_map(mesh1):
+    """PR 5: the fused Pallas body is no longer a local-only special case —
+    on a mesh backend the facade routes ``cg_merged`` + ``pallas=True``
+    through ``solve_shardmap(pallas_fused=True)`` (PallasOp inside the
+    shard_map body).  On the trivial 1-device mesh the result must match
+    the local fused solve."""
+    prob = make_problem((16, 16, 16), "27pt")
+    opts = SolverOptions(tol=1e-8, maxiter=300, pallas=True)
+    local = solve(prob, method="cg_merged", options=opts)
+    dist = solve(prob, method="cg_merged", options=opts, mesh=mesh1)
+    assert int(dist.iters) == int(local.iters)
+    np.testing.assert_allclose(np.asarray(dist.x), np.asarray(local.x),
+                               rtol=1e-12, atol=1e-12)
+
+
+def test_fused_routing_is_capability_based():
+    """The facade's Pallas routing queries the registry capability (any
+    method whose MethodDef declares a fused body), not a hard-coded name."""
+    from repro.api.registry import fused_solver_names
+    assert fused_solver_names() == ["cg_merged"]
+    prob = make_problem((8, 8, 8), "27pt")
+    fused = SolverSession(prob, method="cg_merged",
+                          options=SolverOptions(pallas=True))
+    assert fused._use_fused_body()
+    assert fused.spec.has_fused_body
+    # pallas=True on a non-fused method still swaps the SpMV kernel only
+    plain = SolverSession(prob, method="cg",
+                          options=SolverOptions(pallas=True))
+    assert not plain._use_fused_body()
+    assert not plain.spec.has_fused_body
+
+
 def test_fused_solve_matches_solver_loop():
     from repro.core.solvers import LocalOp, cg_merged
     from repro.kernels.fused_cg import cg_merged_fused
