@@ -5,7 +5,8 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast verify smoke bench bench-kernels bench-precond examples lint
+.PHONY: test test-fast verify smoke serve-smoke bench bench-kernels \
+	bench-precond examples lint
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -38,6 +39,13 @@ bench-precond:
 # merged vs pipelined vs fused kernels); writes BENCH_kernels.json
 bench-kernels:
 	$(PYTHON) -m benchmarks.bench_kernels
+
+# replay the fixed heterogeneous trace through repro.serve, write
+# BENCH_serve.json, then re-assert its SLO gate (zero drops, one compile
+# per bucket, qps/p99 bounds) — the CI serving gate
+serve-smoke:
+	$(PYTHON) -m benchmarks.bench_serve --smoke
+	$(PYTHON) -m benchmarks.bench_serve --check BENCH_serve.json
 
 examples:
 	$(PYTHON) examples/quickstart.py

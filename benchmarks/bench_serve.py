@@ -1,0 +1,162 @@
+"""Serving benchmark: replay the fixed heterogeneous trace through
+``repro.serve`` and write ``BENCH_serve.json``.
+
+The workload is ``repro.serve.trace.MIXED_BUCKETS`` (two grids x two
+methods, one preconditioned — four executables) streamed through the
+service's continuous batcher.  The record carries the SLO numbers a
+capacity plan needs — sustained QPS, p50/p95/p99 end-to-end latency,
+per-bucket compile seconds — plus the integrity facts the CI gate
+asserts:
+
+  * ``dropped == 0``      — every admitted request completed;
+  * ``compiles_per_bucket == 1`` — each bucket compiled exactly once
+    (``SolverSession.cache_stats()``), i.e. the padded-batch executable
+    cache actually amortises compilation across the stream;
+  * ``qps >= qps_floor`` and ``p99_s <= p99_ceiling_s`` — the smoke
+    SLO gate on the fixed CPU trace (loose bounds: CI containers are
+    noisy; a 10x regression still fails loudly).
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.bench_serve            # full
+    PYTHONPATH=src python -m benchmarks.bench_serve --smoke    # CI gate
+    PYTHONPATH=src python -m benchmarks.bench_serve --check BENCH_serve.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+
+from benchmarks.common import csv
+from repro.core.problems import enable_f64
+from repro.serve import (ServeConfig, SolverService, TraceBucket,
+                         generate_trace, replay)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: the smoke trace: tiny grids, modest counts — the CI gate's workload
+SMOKE_BUCKETS = (
+    TraceBucket(grid=(8, 8, 8), method="cg", stencil="27pt", count=6,
+                maxiter=200),
+    TraceBucket(grid=(12, 12, 12), method="cg", stencil="7pt", count=6,
+                maxiter=200),
+    TraceBucket(grid=(8, 8, 8), method="bicgstab_b1", stencil="27pt",
+                count=6, maxiter=200),
+    TraceBucket(grid=(12, 12, 12), method="pcg", stencil="27pt",
+                precond="jacobi", precond_params=(("sweeps", 2),),
+                count=6, maxiter=200),
+)
+
+#: smoke-gate SLO bounds on the fixed CPU trace (generous: a CI container
+#: is noisy; these catch order-of-magnitude regressions, not jitter)
+SMOKE_QPS_FLOOR = 0.5
+SMOKE_P99_CEILING_S = 60.0
+
+
+def check_record(path: str) -> dict:
+    """The artifact-level gate: assert an existing BENCH_serve.json still
+    reports zero drops, one compile per bucket, and SLOs within the
+    bounds recorded alongside the measurements."""
+    with open(path) as f:
+        record = json.load(f)
+    meta, m = record["meta"], record["metrics"]
+    problems = []
+    if record["dropped"] != 0:
+        problems.append(f"dropped {record['dropped']} request(s)")
+    bad_compiles = {b: n for b, n in record["compiles_per_bucket"].items()
+                    if n != 1}
+    if bad_compiles:
+        problems.append(f"compiles per bucket != 1: {bad_compiles}")
+    if m["qps"] < meta["qps_floor"]:
+        problems.append(f"qps {m['qps']:.2f} < floor {meta['qps_floor']}")
+    if m["p99_s"] > meta["p99_ceiling_s"]:
+        problems.append(
+            f"p99 {m['p99_s']:.2f}s > ceiling {meta['p99_ceiling_s']}s")
+    if problems:
+        raise SystemExit(f"[bench_serve] {path}: " + "; ".join(problems))
+    print(f"[bench_serve] {path}: {record['completed']} requests over "
+          f"{len(record['compiles_per_bucket'])} buckets, 0 dropped, "
+          f"1 compile/bucket, qps={m['qps']:.2f} (floor "
+          f"{meta['qps_floor']}), p99={m['p99_s']:.2f}s (ceiling "
+          f"{meta['p99_ceiling_s']}s)")
+    return record
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grids + small counts (the CI gate)")
+    ap.add_argument("--check", metavar="JSON",
+                    help="don't bench: assert an existing BENCH_serve.json "
+                         "still meets its recorded SLO bounds")
+    ap.add_argument("--scale", type=int, default=None,
+                    help="trace size multiplier per bucket (default: "
+                         "smoke 1, full 4)")
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--cache-capacity", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--qps-floor", type=float, default=None)
+    ap.add_argument("--p99-ceiling", type=float, default=None)
+    ap.add_argument("--out", default=os.path.join(ROOT, "BENCH_serve.json"))
+    args = ap.parse_args(argv)
+
+    if args.check:
+        return check_record(args.check)
+
+    enable_f64()
+    buckets = SMOKE_BUCKETS if args.smoke else None
+    scale = args.scale or (1 if args.smoke else 4)
+    trace = (generate_trace(buckets, seed=args.seed, scale=scale)
+             if buckets else generate_trace(seed=args.seed, scale=scale))
+    cfg = ServeConfig(max_batch=args.max_batch,
+                      cache_capacity=args.cache_capacity)
+    service = SolverService(cfg)
+    results = replay(service, trace)
+    service.close()
+    snap = service.snapshot()
+
+    compiles = {b: st["misses"]
+                for b, st in snap["cache"]["per_bucket"].items()}
+    record = {
+        "meta": {
+            "backend": jax.default_backend(),
+            "smoke": bool(args.smoke),
+            "seed": args.seed,
+            "scale": scale,
+            "max_batch": cfg.max_batch,
+            "cache_capacity": cfg.cache_capacity,
+            "qps_floor": args.qps_floor or SMOKE_QPS_FLOOR,
+            "p99_ceiling_s": args.p99_ceiling or SMOKE_P99_CEILING_S,
+        },
+        "requests": len(trace),
+        "completed": len(results),
+        "dropped": len(trace) - len(results),
+        "compiles_per_bucket": compiles,
+        "compile_s_per_bucket": {
+            b: st["compile_s"]
+            for b, st in snap["cache"]["per_bucket"].items()},
+        "metrics": {k: snap[k] for k in
+                    ("qps", "p50_s", "p95_s", "p99_s", "queue_depth_max",
+                     "preemptions", "requeued", "completed")},
+        "per_bucket": snap["per_bucket"],
+    }
+    for b, st in snap["per_bucket"].items():
+        csv(f"bench_serve_{b}_p50", st["p50_s"] * 1e6,
+            f"served={st['served']} p99_ms={st['p99_s']*1e3:.1f}")
+    csv("bench_serve_qps", 0.0, f"qps={snap['qps']:.2f} "
+        f"p99_ms={snap['p99_s']*1e3:.1f}")
+    with open(args.out, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"[bench_serve] wrote {args.out}")
+    # same criterion as the standalone --check gate, by construction
+    check_record(args.out)
+    return record
+
+
+if __name__ == "__main__":
+    main()

@@ -8,11 +8,16 @@ whole burst is a single XLA program: one compile, one dispatch, and each
 iteration's reduction stays one collective for the entire batch.  JAX masks
 finished lanes, so every RHS converges exactly as it would alone.
 
-(The LM serving demo formerly here lives at ``python -m repro.launch.serve``.)
+(The LM serving demo formerly here lives at ``python -m repro.launch.serve``;
+the *streaming* version of this workload — heterogeneous requests over a
+compiled-executable cache — is ``repro.serve``, demoed by
+``python -m repro.launch.serve --mode solver``.)
 
-PYTHONPATH=src python examples/serve_batched.py
+PYTHONPATH=src python examples/serve_batched.py [--batch 8] [--json]
 """
 
+import argparse
+import json
 import time
 
 import numpy as np
@@ -22,37 +27,55 @@ import jax.numpy as jnp
 from repro.api import SolverOptions, SolverSession
 from repro.core.problems import enable_f64
 
-enable_f64()      # paper precision; the facade no longer flips x64 itself
 
-BATCH = 8
-GRID = (32, 32, 32)
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--grid", type=int, nargs=3, default=[32, 32, 32])
+    ap.add_argument("--method", default="bicgstab_b1")
+    ap.add_argument("--json", action="store_true",
+                    help="also print the result record as one JSON line")
+    args = ap.parse_args(argv)
 
-sess = SolverSession(method="bicgstab_b1", grid=GRID, stencil="27pt",
-                     options=SolverOptions(tol=1e-6, maxiter=400,
-                                           norm_ref=None))
-print(f"serving session: {sess.describe()}  batch={BATCH}")
+    enable_f64()      # paper precision; the facade no longer flips x64 itself
+    batch, grid = args.batch, tuple(args.grid)
 
-rng = np.random.default_rng(0)
-bs = jnp.asarray(rng.standard_normal((BATCH, *GRID)),
-                 dtype=sess.problem.b().dtype)
+    sess = SolverSession(method=args.method, grid=grid, stencil="27pt",
+                         options=SolverOptions(tol=1e-6, maxiter=400,
+                                               norm_ref=None))
+    print(f"serving session: {sess.describe()}  batch={batch}")
 
-res, stats = sess.timed_solve_batched(bs, repeats=3)   # warm-up compiles
-iters = np.asarray(res.iters)
-norms = np.asarray(res.res_norm)
-print(f"one compiled call: {BATCH} solves in {stats['median']*1e3:.1f} ms "
-      f"(median of 3)")
-for i in range(BATCH):
-    print(f"  rhs[{i}]: iters={int(iters[i]):3d}  ||r||={norms[i]:.2e}")
+    rng = np.random.default_rng(0)
+    bs = jnp.asarray(rng.standard_normal((batch, *grid)),
+                     dtype=sess.problem.b().dtype)
 
-# the naive serving loop, for contrast: one dispatch per request
-# (warmed + blocked, so this measures execution, not compile/async dispatch)
-jax.block_until_ready(sess.solve(b=bs[0]))
-t0 = time.perf_counter()
-for i in range(BATCH):
-    jax.block_until_ready(sess.solve(b=bs[i]))
-loop_s = time.perf_counter() - t0
-print(f"sequential loop: {loop_s*1e3:.1f} ms for {BATCH} requests "
-      f"(batched/loop = {stats['median']/loop_s:.2f})")
-print("(on CPU the batched lanes pad to the slowest RHS; the batched win "
-      "comes on accelerators, where one dispatch and one collective per "
-      "iteration serve the whole batch)")
+    res, stats = sess.timed_solve_batched(bs, repeats=3)   # warm-up compiles
+    iters = np.asarray(res.iters)
+    norms = np.asarray(res.res_norm)
+    print(f"one compiled call: {batch} solves in {stats['median']*1e3:.1f} ms "
+          f"(median of 3)")
+    for i in range(batch):
+        print(f"  rhs[{i}]: iters={int(iters[i]):3d}  ||r||={norms[i]:.2e}")
+
+    # the naive serving loop, for contrast: one dispatch per request
+    # (warmed + blocked, so this measures execution, not compile/async dispatch)
+    jax.block_until_ready(sess.solve(b=bs[0]))
+    t0 = time.perf_counter()
+    for i in range(batch):
+        jax.block_until_ready(sess.solve(b=bs[i]))
+    loop_s = time.perf_counter() - t0
+    print(f"sequential loop: {loop_s*1e3:.1f} ms for {batch} requests "
+          f"(batched/loop = {stats['median']/loop_s:.2f})")
+    print("(on CPU the batched lanes pad to the slowest RHS; the batched win "
+          "comes on accelerators, where one dispatch and one collective per "
+          "iteration serve the whole batch)")
+    out = {"method": args.method, "grid": list(grid), "batch": batch,
+           "batched_median_s": stats["median"], "loop_s": loop_s,
+           "iters": iters.tolist(), "res_norm": norms.tolist()}
+    if args.json:
+        print(json.dumps(out))
+    return out
+
+
+if __name__ == "__main__":
+    main()

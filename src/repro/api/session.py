@@ -23,6 +23,7 @@ exactly as it would alone (same iteration count, same iterates).
 
 from __future__ import annotations
 
+import time
 from typing import Any
 
 import jax
@@ -99,8 +100,15 @@ class SolverSession:
                 f"preconditioner, but {self.precond.describe()} declares "
                 f"spd_preserving=False; use pbicgstab or an SPD-preserving "
                 f"M (CG's short recurrence silently breaks down otherwise)")
-        self._fn = None          # compiled single-RHS solve
-        self._batched_fn = None  # compiled multi-RHS solve
+        # AOT-compiled executables keyed by input shape: ``grid`` for the
+        # single-RHS solve, ``(batch, *grid)`` for the batched one.  Each
+        # entry is a ``jax.stages.Compiled`` (the ``.lower().compile()``
+        # product of the same jitted builders the lazy path used), so the
+        # session can report honest per-shape compile seconds and hit/miss
+        # counts — the observability ``repro.serve``'s executable cache and
+        # its CI gate are built on.
+        self._executables: dict[tuple, Any] = {}
+        self._compile_stats: dict[tuple, dict] = {}
         self._timed_fn = None         # undonated variants for timed_*
         self._timed_batched_fn = None  # (repeat calls reuse input buffers)
 
@@ -197,13 +205,63 @@ class SolverSession:
                                P(None, *self.layout.dim_axes))
         return jax.device_put(x, sh)
 
+    # -- compiled-executable cache (observability for the serving layer) ------
+    def _executable(self, shape: tuple, builder, example_args: tuple):
+        """Return the AOT-compiled executable for ``shape``, compiling (and
+        recording honest wall-clock compile seconds) on first use."""
+        ent = self._executables.get(shape)
+        st = self._compile_stats.setdefault(
+            (shape, self.method, self.options.precond),
+            {"hits": 0, "misses": 0, "compile_s": 0.0})
+        if ent is None:
+            t0 = time.perf_counter()
+            ent = builder().lower(*example_args).compile()
+            st["misses"] += 1
+            st["compile_s"] += time.perf_counter() - t0
+            self._executables[shape] = ent
+        else:
+            st["hits"] += 1
+        return ent
+
+    def cache_stats(self) -> dict[tuple, dict]:
+        """Compile-cache observability: ``{(shape, method, precond):
+        {"hits", "misses", "compile_s"}}``.  ``shape`` is the problem grid
+        for single-RHS solves and ``(batch, *grid)`` for batched ones; a
+        miss is one real XLA compile (``jit(...).lower().compile()``) and
+        ``compile_s`` its measured wall-clock cost.  ``repro.serve``'s
+        executable cache asserts "exactly one compile per bucket" against
+        these counters."""
+        return {k: dict(v) for k, v in self._compile_stats.items()}
+
+    def _abstract(self, shape: tuple, *, batched: bool = False):
+        dt = jnp.dtype(self.problem.dtype)
+        sh = self.backend.sharding()
+        if sh is not None and batched:
+            sh = NamedSharding(self.backend.mesh,
+                               P(None, *self.layout.dim_axes))
+        if sh is None:
+            return jax.ShapeDtypeStruct(shape, dt)
+        return jax.ShapeDtypeStruct(shape, dt, sharding=sh)
+
+    def compile_batched(self, batch: int) -> float:
+        """Compile the ``batch``-RHS executable ahead of time (no solve
+        executes) and return the compile seconds; a later
+        :meth:`solve_batched` at this batch size is a cache hit.  This is
+        the serve layer's compile-then-admit hook: a cold bucket compiles
+        off the serving path and only then starts taking batches."""
+        shape = (batch, *self.problem.shape)
+        ab = self._abstract(shape, batched=True)
+        t0 = time.perf_counter()
+        self._executable(shape, self._build_batched_fn, (ab, ab))
+        return time.perf_counter() - t0
+
     def solve(self, b: jax.Array | None = None,
               x0: jax.Array | None = None) -> SolveResult:
-        if self._fn is None:
-            self._fn = self._build_fn()
         b = self.problem.b() if b is None else b
         x0 = self.problem.x0() if x0 is None else x0
-        return self._fn(self._place(b), self._place(x0))
+        fn = self._executable(tuple(self.problem.shape), self._build_fn,
+                              (self._abstract(tuple(self.problem.shape)),) * 2)
+        return fn(self._place(b), self._place(x0))
 
     def timed_solve(self, b: jax.Array | None = None,
                     x0: jax.Array | None = None, *,
@@ -271,9 +329,10 @@ class SolverSession:
         Returns a ``SolveResult`` whose leaves carry a leading batch axis.
         """
         bs, x0s = self._prep_batched(bs, x0s)
-        if self._batched_fn is None:
-            self._batched_fn = self._build_batched_fn()
-        return self._batched_fn(bs, x0s)
+        shape = tuple(bs.shape)
+        fn = self._executable(shape, self._build_batched_fn,
+                              (self._abstract(shape, batched=True),) * 2)
+        return fn(bs, x0s)
 
     def timed_solve_batched(self, bs: jax.Array,
                             x0s: jax.Array | None = None, *,

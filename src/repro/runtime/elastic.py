@@ -19,6 +19,17 @@ from repro.distributed.sharding import param_shardings, param_specs
 from repro.optim.adamw import AdamWState
 
 
+def reshard_array(x, mesh: Mesh, spec) -> jax.Array:
+    """Place one (host or otherwise-sharded) array onto ``mesh``/``spec``.
+
+    The serve recovery path's elastic restore: a preempted batch's WAL
+    entry is global host arrays (runtime/checkpoint.py), so the service
+    that recovers it may run a DIFFERENT topology than the one that was
+    preempted — restore is just placement onto the current mesh.
+    """
+    return jax.device_put(x, NamedSharding(mesh, spec))
+
+
 def reshard_state(params: Any, opt_state: AdamWState | None,
                   mesh: Mesh) -> tuple[Any, AdamWState | None]:
     """Place an (unsharded or otherwise-sharded) state onto ``mesh``."""

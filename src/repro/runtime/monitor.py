@@ -32,13 +32,15 @@ class Heartbeat:
 
     def tick(self) -> dict:
         now = time.monotonic()
-        report = {}
-        if self._last is not None:
-            dt = now - self._last
-            self.times.append(dt)
-            report = self.check(dt)
+        if self._last is None:
+            # cold start: no interval exists yet — return a well-formed
+            # record (callers index into it) instead of {}
+            self._last = now
+            return {"step_time": None, "straggler": False, "warmup": True}
+        dt = now - self._last
+        self.times.append(dt)
         self._last = now
-        return report
+        return self.check(dt)
 
     def check(self, dt: float) -> dict:
         if len(self.times) < 8:
@@ -46,10 +48,15 @@ class Heartbeat:
         xs = sorted(self.times)
         med = xs[len(xs) // 2]
         mad = sorted(abs(x - med) for x in xs)[len(xs) // 2]
-        threshold = med + self.straggler_factor * max(mad, 0.05 * med)
+        # a window of identical samples has mad == 0 (and med may be 0 for
+        # sub-resolution steps): floor the spread term so the threshold
+        # never degenerates to med itself and flags dt == med as straggling
+        spread = max(mad, 0.05 * med, 1e-9)
+        threshold = med + self.straggler_factor * spread
         return {
             "step_time": dt,
             "median": med,
+            "mad": mad,
             "straggler": dt > threshold,
         }
 

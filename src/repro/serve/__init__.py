@@ -1,0 +1,30 @@
+# Production solver service (docs/API.md §Serving): continuous batching
+# of a heterogeneous request stream over an LRU cache of pre-compiled
+# executables, with SLO metrics and WAL-based preemption recovery.
+from repro.serve.cache import CacheEntry, ExecutableCache, session_for
+from repro.serve.metrics import PERCENTILES, ServeMetrics, scan_metrics
+from repro.serve.queue import (BucketKey, DTYPES, QueueFull, Request,
+                               RequestQueue)
+from repro.serve.service import ServeConfig, ServeResult, SolverService
+from repro.serve.trace import MIXED_BUCKETS, TraceBucket, generate_trace, replay
+
+__all__ = [
+    "BucketKey",
+    "CacheEntry",
+    "DTYPES",
+    "ExecutableCache",
+    "MIXED_BUCKETS",
+    "PERCENTILES",
+    "QueueFull",
+    "Request",
+    "RequestQueue",
+    "ServeConfig",
+    "ServeMetrics",
+    "ServeResult",
+    "SolverService",
+    "TraceBucket",
+    "generate_trace",
+    "replay",
+    "scan_metrics",
+    "session_for",
+]

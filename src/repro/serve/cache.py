@@ -1,0 +1,120 @@
+"""LRU cache of pre-compiled solver executables, one entry per bucket.
+
+An entry owns a ``SolverSession`` whose batched executable has been
+AOT-compiled at the service's fixed padded batch size
+(``session.compile_batched``), so every dispatch is a warm call — the
+"compiled-resource reuse" the PETSc hybrid study identifies as the
+efficiency lever at moderate resources.  The cache is bounded: inserting
+past ``capacity`` evicts the least-recently-*dispatched* bucket, dropping
+its session (and with it the compiled executables) on the floor.
+
+Counter semantics (exported through ``stats()`` and asserted by the serve
+tests + CI gate):
+
+  * ``miss``  — a bucket needed an executable that wasn't resident; each
+    miss corresponds to exactly one compile (triggered by the service's
+    compile-then-admit path).
+  * ``hit``   — one dispatched batch served from a resident entry.
+  * ``eviction`` — one entry dropped to respect ``capacity``.
+
+Per-bucket compile seconds come from the session's own
+``cache_stats()`` (the satellite observability this layer is built on).
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+
+from repro.api import SolverOptions, SolverSession
+from repro.serve.queue import BucketKey
+
+
+def session_for(key: BucketKey, *, pallas: bool = False) -> SolverSession:
+    """Build the ``SolverSession`` a bucket's executable lives in."""
+    tol, maxiter, norm_ref, pp = key.solve_params
+    opts = SolverOptions(tol=tol, maxiter=maxiter, norm_ref=norm_ref,
+                         f64=(key.dtype == "f64"), pallas=pallas,
+                         precond=key.precond,
+                         precond_params=dict(pp) if pp else None)
+    return SolverSession(method=key.method, grid=key.grid,
+                         stencil=key.stencil, options=opts)
+
+
+class CacheEntry:
+    """One resident bucket: its session + the padded batch size it was
+    compiled at."""
+
+    def __init__(self, key: BucketKey, session: SolverSession, batch: int):
+        self.key = key
+        self.session = session
+        self.batch = batch
+        self.batches_served = 0
+
+    def compile_seconds(self) -> float:
+        return sum(st["compile_s"]
+                   for st in self.session.cache_stats().values())
+
+
+class ExecutableCache:
+    """Bounded LRU of ``CacheEntry``, with hit/miss/eviction counters."""
+
+    def __init__(self, capacity: int):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._entries: OrderedDict[BucketKey, CacheEntry] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self._per_key: dict[BucketKey, dict] = {}
+
+    def _counters(self, key: BucketKey) -> dict:
+        return self._per_key.setdefault(
+            key, {"hits": 0, "misses": 0, "evictions": 0, "compile_s": 0.0})
+
+    def contains(self, key: BucketKey) -> bool:
+        """Residency check WITHOUT touching LRU order or counters (the
+        scheduler peeks constantly; only dispatches should count)."""
+        return key in self._entries
+
+    def lookup(self, key: BucketKey) -> CacheEntry | None:
+        """Dispatch-path lookup: counts a hit and refreshes LRU order."""
+        ent = self._entries.get(key)
+        if ent is None:
+            return None
+        self._entries.move_to_end(key)
+        self.hits += 1
+        self._counters(key)["hits"] += 1
+        ent.batches_served += 1
+        return ent
+
+    def record_miss(self, key: BucketKey) -> None:
+        """A bucket needed a non-resident executable; the service pairs
+        every miss with exactly one compile-then-admit."""
+        self.misses += 1
+        self._counters(key)["misses"] += 1
+
+    def insert(self, entry: CacheEntry) -> list[BucketKey]:
+        """Admit a compiled entry; returns the evicted keys (if any)."""
+        self._entries[entry.key] = entry
+        self._entries.move_to_end(entry.key)
+        self._counters(entry.key)["compile_s"] += entry.compile_seconds()
+        evicted = []
+        while len(self._entries) > self.capacity:
+            k, dropped = self._entries.popitem(last=False)
+            del dropped
+            self.evictions += 1
+            self._counters(k)["evictions"] += 1
+            evicted.append(k)
+        return evicted
+
+    def stats(self) -> dict:
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+            "entries": len(self._entries),
+            "capacity": self.capacity,
+            "per_bucket": {k.short(): dict(v)
+                           for k, v in self._per_key.items()},
+        }

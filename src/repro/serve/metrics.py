@@ -1,0 +1,118 @@
+"""SLO metrics for the solver service: latency percentiles, sustained
+QPS, queue depth, per-bucket compile time.
+
+Latency is end-to-end (admission -> result committed), which is what a
+client experiences: queue wait + any compile the request was unlucky
+enough to trigger + solve time.  Sustained QPS is completions over the
+span from first admission to last completion — the number a capacity
+plan can use, not a burst peak.
+
+``snapshot()`` returns one plain-dict record and ``write()`` persists it
+as a JSON file, the same host-side record style as
+``runtime/monitor.py``'s per-host heartbeats (a directory of small JSON
+files a coordinator can scan) — ``scan_metrics`` is the coordinator-side
+reader.  ``benchmarks/bench_serve.py`` embeds the same record into
+``BENCH_serve.json`` for the CI gate.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+#: the SLO percentiles every snapshot reports
+PERCENTILES = (50, 95, 99)
+
+
+class ServeMetrics:
+    def __init__(self):
+        self._latencies: list[float] = []
+        self._by_bucket: dict[str, list[float]] = {}
+        self._depth_samples: list[int] = []
+        self.completed = 0
+        self.preemptions = 0
+        self.requeued = 0
+        self.rejected = 0
+        self._t_first_submit: float | None = None
+        self._t_last_done: float | None = None
+
+    # -- recording ------------------------------------------------------------
+    def record_submit(self, now: float) -> None:
+        if self._t_first_submit is None:
+            self._t_first_submit = now
+
+    def record_completion(self, bucket: str, latency_s: float,
+                          now: float) -> None:
+        self._latencies.append(latency_s)
+        self._by_bucket.setdefault(bucket, []).append(latency_s)
+        self.completed += 1
+        self._t_last_done = now
+
+    def record_queue_depth(self, depth: int) -> None:
+        self._depth_samples.append(depth)
+
+    def record_preemption(self, n_requeued: int) -> None:
+        self.preemptions += 1
+        self.requeued += n_requeued
+
+    # -- reading --------------------------------------------------------------
+    @staticmethod
+    def _pcts(lats: list[float]) -> dict[str, float]:
+        if not lats:
+            return {f"p{p}_s": None for p in PERCENTILES}
+        arr = np.asarray(lats)
+        return {f"p{p}_s": float(np.percentile(arr, p)) for p in PERCENTILES}
+
+    def qps(self) -> float | None:
+        """Sustained throughput: completions / (first submit -> last done)."""
+        if self.completed == 0 or self._t_first_submit is None:
+            return None
+        span = self._t_last_done - self._t_first_submit
+        return self.completed / max(span, 1e-9)
+
+    def snapshot(self, *, cache_stats: dict | None = None,
+                 queue_depth: int | None = None) -> dict:
+        rec = {
+            "t": time.time(),
+            "completed": self.completed,
+            "preemptions": self.preemptions,
+            "requeued": self.requeued,
+            "rejected": self.rejected,
+            "qps": self.qps(),
+            "queue_depth": queue_depth,
+            "queue_depth_max": (max(self._depth_samples)
+                                if self._depth_samples else 0),
+            **self._pcts(self._latencies),
+            "per_bucket": {
+                b: {"served": len(ls), **self._pcts(ls)}
+                for b, ls in sorted(self._by_bucket.items())
+            },
+        }
+        if cache_stats is not None:
+            rec["cache"] = cache_stats
+        return rec
+
+    def write(self, directory: str, *, name: str = "serve",
+              **snapshot_kw) -> str:
+        """Persist a snapshot as ``directory/metrics_<name>.json`` (the
+        monitor.py per-host-record idiom)."""
+        os.makedirs(directory, exist_ok=True)
+        path = os.path.join(directory, f"metrics_{name}.json")
+        with open(path, "w") as f:
+            json.dump(self.snapshot(**snapshot_kw), f, indent=2)
+        return path
+
+
+def scan_metrics(directory: str) -> dict[str, dict]:
+    """Coordinator-side reader for ``ServeMetrics.write`` records."""
+    out = {}
+    if not os.path.isdir(directory):
+        return out
+    for fn in sorted(os.listdir(directory)):
+        if fn.startswith("metrics_") and fn.endswith(".json"):
+            with open(os.path.join(directory, fn)) as f:
+                out[fn[len("metrics_"):-len(".json")]] = json.load(f)
+    return out

@@ -1,0 +1,330 @@
+"""The serving loop: continuous batching over the executable cache.
+
+The scheduling analogue of the paper's task-based-over-fork-join thesis:
+instead of one homogeneous ``solve_batched`` call (fork-join over a fixed
+batch), a *stream* of heterogeneous requests keeps the machine busy —
+warm buckets dispatch while cold buckets compile off to the side, and a
+preemption costs a re-enqueue, not the queue.
+
+One ``step()`` is one scheduling action:
+
+  1. admit any finished compiles into the LRU cache;
+  2. for every pending bucket with no resident executable, record a cache
+     miss and start its compile (a background thread by default, so a
+     cold bucket never stalls a warm one);
+  3. dispatch one padded batch from the warmest pending bucket (the one
+     whose head request has waited longest), or — if nothing is warm —
+     block on the oldest in-flight compile.
+
+Dispatches pad to the bucket's fixed ``max_batch`` with zero lanes (a
+zero RHS converges at iteration 0 and is masked out by the batched
+while-loop), so each bucket compiles **exactly once** — verified against
+``SolverSession.cache_stats()`` by the tests and the CI gate.
+
+Preemption recovery: with ``recovery_dir`` set, every dispatch first
+journals its in-flight batch (request ids + RHS payloads) as a
+``runtime/checkpoint.py`` write-ahead entry.  An injected preemption
+(``runtime.monitor.FailureInjector``) mid-solve restores the batch *from
+disk* and re-enqueues it at the front of its bucket — zero dropped
+requests, bitwise-identical results (solves are deterministic, so a
+re-run is indistinguishable from an uninterrupted one).  A service that
+starts over a dead process's WAL re-admits the orphaned batches via
+:meth:`SolverService.recover`; the WAL holds global host arrays, so the
+recovering service may run a different topology than the one that died
+(``runtime/elastic.py::reshard_array`` places them onto the current
+mesh).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime import checkpoint as ckpt
+from repro.runtime.elastic import reshard_array
+from repro.runtime.monitor import FailureInjector, SimulatedFailure
+from repro.serve.cache import CacheEntry, ExecutableCache, session_for
+from repro.serve.metrics import ServeMetrics
+from repro.serve.queue import BucketKey, Request, RequestQueue
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Service knobs.  ``max_batch`` is the padded in-flight batch size
+    every bucket compiles at (one executable per bucket); ``async_compile``
+    runs compiles on a background thread (compile-then-admit);
+    ``recovery_dir`` enables the write-ahead journal."""
+
+    max_batch: int = 4
+    cache_capacity: int = 8
+    max_queue_depth: int | None = None
+    async_compile: bool = True
+    recovery_dir: str | None = None
+    pallas: bool = False
+
+
+@dataclasses.dataclass
+class ServeResult:
+    """One completed request, as the client sees it."""
+
+    id: int
+    bucket: str
+    x: np.ndarray
+    iters: int
+    res_norm: float
+    latency_s: float
+    requeues: int
+
+
+class SolverService:
+    def __init__(self, config: ServeConfig | None = None, *,
+                 injector: FailureInjector | None = None):
+        self.config = config or ServeConfig()
+        self.queue = RequestQueue(max_depth=self.config.max_queue_depth)
+        self.cache = ExecutableCache(self.config.cache_capacity)
+        self.metrics = ServeMetrics()
+        self.injector = injector
+        self._results: dict[int, ServeResult] = {}
+        self._compiling: dict[BucketKey, object] = {}   # key -> Future
+        self._pool = (ThreadPoolExecutor(max_workers=1,
+                                         thread_name_prefix="serve-compile")
+                      if self.config.async_compile else None)
+        self._seq = 0
+
+    # -- client surface -------------------------------------------------------
+    def submit(self, req: Request) -> int:
+        now = time.monotonic()
+        try:
+            rid = self.queue.admit(req, now=now)
+        except Exception:
+            self.metrics.rejected += 1
+            raise
+        self.metrics.record_submit(now)
+        self.metrics.record_queue_depth(self.queue.depth())
+        return rid
+
+    def results(self) -> dict[int, ServeResult]:
+        return self._results
+
+    def run_until_drained(self) -> dict[int, ServeResult]:
+        while self.step():
+            pass
+        return self._results
+
+    def snapshot(self) -> dict:
+        return self.metrics.snapshot(cache_stats=self.cache.stats(),
+                                     queue_depth=self.queue.depth())
+
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+
+    # -- the scheduling step --------------------------------------------------
+    def step(self) -> bool:
+        """One scheduling action; returns False when fully drained."""
+        self._admit_ready_compiles(block=False)
+        keys = self.queue.buckets()
+        if not keys:
+            if self._compiling:
+                self._admit_ready_compiles(block=True)
+                return True
+            return False
+        warm = [k for k in keys if self.cache.contains(k)]
+        for k in keys:
+            if not self.cache.contains(k) and k not in self._compiling:
+                # the miss event: this bucket's traffic needs a compile
+                self.cache.record_miss(k)
+                self._start_compile(k)
+        if warm:
+            self._dispatch(warm[0])
+            return True
+        self._admit_ready_compiles(block=True)
+        return True
+
+    # -- compile-then-admit ---------------------------------------------------
+    def _build_entry(self, key: BucketKey) -> CacheEntry:
+        session = session_for(key, pallas=self.config.pallas)
+        session.compile_batched(self.config.max_batch)
+        return CacheEntry(key, session, self.config.max_batch)
+
+    def _start_compile(self, key: BucketKey) -> None:
+        if self._pool is None:
+            self.cache.insert(self._build_entry(key))
+            return
+        self._compiling[key] = self._pool.submit(self._build_entry, key)
+
+    def _admit_ready_compiles(self, *, block: bool) -> None:
+        if not self._compiling:
+            return
+        done = [k for k, f in self._compiling.items() if f.done()]
+        if block and not done:
+            oldest = next(iter(self._compiling))
+            self._compiling[oldest].result()
+            done = [k for k, f in self._compiling.items() if f.done()]
+        for k in done:
+            fut = self._compiling.pop(k)
+            self.cache.insert(fut.result())
+
+    # -- dispatch + recovery --------------------------------------------------
+    def _dispatch(self, key: BucketKey) -> None:
+        entry = self.cache.lookup(key)
+        assert entry is not None, key
+        reqs = self.queue.next_batch(key, entry.batch)
+        self.metrics.record_queue_depth(self.queue.depth())
+        session = entry.session
+        dtype = np.dtype(session.problem.dtype)
+        bs = np.zeros((entry.batch, *key.grid), dtype)
+        for i, r in enumerate(reqs):
+            bs[i] = np.asarray(r.b, dtype)
+        seq = self._seq
+        self._seq += 1
+        self._wal_write(seq, key, reqs, bs)
+        try:
+            res = session.solve_batched(jnp.asarray(bs))
+            # "mid-solve": the dispatch is in flight (JAX dispatch is
+            # async); a preemption here loses the computed results
+            if self.injector is not None:
+                self.injector.maybe_fail(seq)
+            res = jax.block_until_ready(res)
+        except SimulatedFailure:
+            self._recover_inflight(seq, key, reqs)
+            self.metrics.record_preemption(len(reqs))
+            return
+        now = time.monotonic()
+        for i, r in enumerate(reqs):
+            self._results[r.id] = ServeResult(
+                id=r.id, bucket=key.short(), x=np.asarray(res.x[i]),
+                iters=int(res.iters[i]), res_norm=float(res.res_norm[i]),
+                latency_s=now - r.t_submit, requeues=r.requeues)
+            self.metrics.record_completion(key.short(), now - r.t_submit, now)
+        self._wal_clear(seq)
+
+    # -- the write-ahead journal ----------------------------------------------
+    def _wal_meta_path(self, seq: int) -> str:
+        return os.path.join(self.config.recovery_dir, f"wal_{seq:08d}.json")
+
+    @staticmethod
+    def _wal_template(key: BucketKey, batch: int, dtype: str):
+        np_dtype = np.float64 if dtype == "f64" else np.float32
+        return {"ids": np.zeros(batch, np.int64),
+                "t_submit": np.zeros(batch, np.float64),
+                "requeues": np.zeros(batch, np.int64),
+                "bs": np.zeros((batch, *key.grid), np_dtype)}
+
+    def _wal_write(self, seq: int, key: BucketKey, reqs: list[Request],
+                   bs: np.ndarray) -> None:
+        if self.config.recovery_dir is None:
+            return
+        state = self._wal_template(key, bs.shape[0], key.dtype)
+        state["bs"] = bs
+        state["ids"][:] = -1
+        for i, r in enumerate(reqs):
+            state["ids"][i] = r.id
+            state["t_submit"][i] = r.t_submit
+            state["requeues"][i] = r.requeues
+        os.makedirs(self.config.recovery_dir, exist_ok=True)
+        with open(self._wal_meta_path(seq), "w") as f:
+            json.dump({"seq": seq, "batch": bs.shape[0], "n": len(reqs),
+                       "key": {"grid": list(key.grid),
+                               "stencil": key.stencil, "method": key.method,
+                               "precond": key.precond, "dtype": key.dtype,
+                               "solve_params": [key.solve_params[0],
+                                                key.solve_params[1],
+                                                key.solve_params[2],
+                                                [list(kv) for kv in
+                                                 key.solve_params[3]]]}}, f)
+        ckpt.save(state, self.config.recovery_dir, step=seq, keep=10 ** 9)
+
+    def _wal_clear(self, seq: int) -> None:
+        if self.config.recovery_dir is None:
+            return
+        shutil.rmtree(os.path.join(self.config.recovery_dir,
+                                   f"step_{seq:08d}"), ignore_errors=True)
+        try:
+            os.remove(self._wal_meta_path(seq))
+        except FileNotFoundError:
+            pass
+
+    @staticmethod
+    def _key_from_meta(meta: dict) -> BucketKey:
+        k = meta["key"]
+        tol, maxiter, norm_ref, pp = k["solve_params"]
+        return BucketKey(grid=tuple(k["grid"]), stencil=k["stencil"],
+                         method=k["method"], precond=k["precond"],
+                         dtype=k["dtype"],
+                         solve_params=(tol, maxiter, norm_ref,
+                                       tuple(tuple(kv) for kv in pp)))
+
+    def _requests_from_wal(self, seq: int, key: BucketKey,
+                           meta: dict) -> list[Request]:
+        """Rebuild the in-flight requests from the journal (the on-disk
+        copy is authoritative — the preempted dispatch's memory is gone)."""
+        template = self._wal_template(key, meta["batch"], key.dtype)
+        state, _ = ckpt.restore(template, self.config.recovery_dir, step=seq)
+        tol, maxiter, norm_ref, pp = key.solve_params
+        out = []
+        for i in range(meta["n"]):
+            b = state["bs"][i]
+            entry = (self.cache._entries.get(key)
+                     if self.cache.contains(key) else None)
+            if entry is not None and entry.session.backend.mesh is not None:
+                # elastic placement: the WAL is host-global; put the RHS
+                # onto whatever mesh THIS service runs (which may differ
+                # from the topology that was preempted)
+                b = np.asarray(reshard_array(
+                    state["bs"][i], entry.session.backend.mesh,
+                    entry.session.backend.sharding().spec))
+            out.append(Request(
+                b=b, method=key.method, stencil=key.stencil,
+                precond=key.precond,
+                precond_params=dict(pp) if pp else None, dtype=key.dtype,
+                tol=tol, maxiter=maxiter, norm_ref=norm_ref,
+                id=int(state["ids"][i]),
+                t_submit=float(state["t_submit"][i]),
+                requeues=int(state["requeues"][i])))
+        return out
+
+    def _recover_inflight(self, seq: int, key: BucketKey,
+                          reqs: list[Request]) -> None:
+        """A dispatch was preempted: put its requests back at the front of
+        their bucket.  With the WAL enabled the batch is rebuilt from disk
+        (exercising the real restore path); without it, from memory."""
+        if self.config.recovery_dir is not None:
+            with open(self._wal_meta_path(seq)) as f:
+                meta = json.load(f)
+            reqs = self._requests_from_wal(seq, key, meta)
+            self._wal_clear(seq)
+        self.queue.requeue_front(key, reqs)
+
+    def recover(self) -> dict[int, int]:
+        """Cold-start recovery: scan ``recovery_dir`` for journal entries a
+        dead process left behind and re-admit their requests (front of
+        queue, fresh ids, ``t_submit`` reset to now — queue-wait before the
+        death is not double-counted).  Returns ``{old_id: new_id}``."""
+        remap: dict[int, int] = {}
+        d = self.config.recovery_dir
+        if d is None or not os.path.isdir(d):
+            return remap
+        metas = sorted(fn for fn in os.listdir(d)
+                       if fn.startswith("wal_") and fn.endswith(".json"))
+        for fn in metas:
+            with open(os.path.join(d, fn)) as f:
+                meta = json.load(f)
+            key = self._key_from_meta(meta)
+            seq = meta["seq"]
+            for r in self._requests_from_wal(seq, key, meta):
+                old = r.id
+                r.id = None
+                r.requeues += 1
+                new = self.queue.admit(r, now=time.monotonic())
+                remap[old] = new
+            self._wal_clear(seq)
+        return remap

@@ -57,10 +57,13 @@ def test_session_reuses_compiled_fn(problem):
     sess = SolverSession(problem, method="cg",
                          options=SolverOptions(tol=1e-8, maxiter=500))
     r1 = sess.solve()
-    fn = sess._fn
+    fn = sess._executables[tuple(problem.shape)]
     r2 = sess.solve()
-    assert sess._fn is fn
+    assert sess._executables[tuple(problem.shape)] is fn
     np.testing.assert_array_equal(np.asarray(r1.x), np.asarray(r2.x))
+    # the compile-cache observability: one real compile, then hits
+    st = sess.cache_stats()[(tuple(problem.shape), "cg", "none")]
+    assert st["misses"] == 1 and st["hits"] == 1 and st["compile_s"] > 0
 
 
 def test_timed_solve_returns_blocked_stats(problem):

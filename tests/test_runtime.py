@@ -90,6 +90,34 @@ def test_heartbeat_straggler_detection():
     assert hb.check(1.0)["straggler"] is True
 
 
+def test_heartbeat_cold_start_returns_wellformed_record():
+    """The first tick has no interval yet: it must still return a record
+    callers can index (it used to return {})."""
+    hb = Heartbeat()
+    first = hb.tick()
+    assert first == {"step_time": None, "straggler": False, "warmup": True}
+    second = hb.tick()
+    assert second["straggler"] is False
+    assert second["step_time"] >= 0.0
+
+
+def test_heartbeat_identical_window_does_not_flag_median():
+    """All window samples identical => MAD == 0; the spread floor must
+    keep dt == median from being flagged (and survive median == 0 for
+    sub-resolution steps)."""
+    hb = Heartbeat(straggler_factor=3.0)
+    for _ in range(20):
+        hb.times.append(0.1)
+    rep = hb.check(0.1)
+    assert rep["mad"] == 0.0 and rep["straggler"] is False
+    # degenerate all-zero window: dt == 0 is fine, a real step is not
+    hb0 = Heartbeat(straggler_factor=3.0)
+    for _ in range(20):
+        hb0.times.append(0.0)
+    assert hb0.check(0.0)["straggler"] is False
+    assert hb0.check(0.1)["straggler"] is True
+
+
 def test_host_scan(tmp_path):
     d = str(tmp_path)
     write_host_heartbeat(d, 0, step=10, step_time=0.5)
