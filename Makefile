@@ -6,7 +6,7 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast verify smoke serve-smoke bench bench-kernels \
-	bench-precond examples lint
+	bench-precond examples lint audit audit-write
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -14,6 +14,17 @@ test:
 # correctness-critical lint (ruff.toml pins the rule set); CI runs the same
 lint:
 	ruff check src tests benchmarks examples
+
+# static contract auditor (repro.analysis): registry<->MethodDef sweep,
+# MethodDef AST lint, Pallas kernel checks, then the compiled-HLO comms/
+# donation audit of every method x mesh against the committed AUDIT.json
+# baseline.  CI gate; `make audit-write` refreshes the baseline after a
+# deliberate contract change.
+audit:
+	$(PYTHON) -m repro.analysis --check AUDIT.json
+
+audit-write:
+	$(PYTHON) -m repro.analysis --write AUDIT.json
 
 # the tier-1 gate, exactly as ROADMAP.md specifies it (== make test)
 verify: test

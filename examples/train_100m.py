@@ -9,7 +9,6 @@ PYTHONPATH=src python examples/train_100m.py --steps 300
 """
 
 import argparse
-import dataclasses
 
 from repro.configs.base import ArchConfig, register
 from repro.launch import train as train_mod

@@ -1,0 +1,13 @@
+# Static-verification subsystem: the HLO parsing layer (hlo.py) plus three
+# analysis passes gated in CI via `python -m repro.analysis --check AUDIT.json`
+# (see docs/API.md §"Static analysis"):
+#
+#   audit        — lower every registry method × mesh shape to compiled HLO
+#                  and assert collective counts/bytes + donation aliasing
+#                  match the registry's communication metadata exactly
+#   lint_methods — AST lint over every MethodDef body (no Python branching
+#                  on traced state, no mutable-global closures, operator-
+#                  protocol calls only, declared state layout == produced)
+#   lint_kernels — Pallas kernel static checks (VMEM footprint vs budget,
+#                  block divisibility, oracle + test-row completeness)
+from repro.analysis.violation import Violation, format_violations  # noqa: F401

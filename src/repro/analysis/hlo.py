@@ -139,6 +139,72 @@ def count_collectives(hlo_text: str) -> dict[str, int]:
     return dict(counts)
 
 
+def collective_stats(hlo_text: str) -> dict[str, dict[str, int]]:
+    """Per-opcode ``{"count": n, "bytes": b}`` over every collective.
+
+    The audit's drift detector: counts are checked against the registry's
+    communication metadata, bytes against the committed AUDIT.json baseline
+    (a byte change with stable counts means the *payload* structure moved —
+    e.g. a psum pair silently unfusing into two half-size reductions would
+    keep total bytes but change counts, while a state-layout change keeps
+    counts but moves bytes).  ``-start``/``-done`` pairs count once, like
+    :func:`count_collectives`.
+    """
+    stats: dict[str, dict[str, int]] = {}
+    for comp in parse_computations(hlo_text):
+        for ins in comp.instructions:
+            if is_collective(ins.opcode) and not ins.opcode.endswith("-done"):
+                base = ins.opcode.replace("-start", "")
+                rec = stats.setdefault(base, {"count": 0, "bytes": 0})
+                rec["count"] += 1
+                rec["bytes"] += ins.operand_bytes or ins.result_bytes
+    return stats
+
+
+#: the donation annotations jax leaves in lowered text: ``tf.aliasing_output``
+#: on unsharded lowerings, ``jax.buffer_donor`` once shardings are attached.
+_DONATION_MARKERS = ("tf.aliasing_output", "jax.buffer_donor")
+
+
+def donation_markers(lowered_text: str) -> int:
+    """Number of donated arguments visible in *lowered* (StableHLO) text.
+
+    Counts both spellings: a lowering with concrete/unsharded arguments
+    annotates ``tf.aliasing_output = N``, one with shardings attached emits
+    ``jax.buffer_donor = true`` — either way, one marker per donated
+    argument.  ``SolverOptions.donate`` donates exactly x0, so the audit
+    expects 1 with donation on and 0 with it off.
+    """
+    return sum(lowered_text.count(m) for m in _DONATION_MARKERS)
+
+
+_ALIAS_ENTRY_RE = re.compile(r"\{[\d,\s]*\}:\s*\((\d+)\s*,")
+
+
+def input_output_aliases(compiled_text: str) -> list[int]:
+    """Parameter numbers aliased to outputs in a *compiled* HloModule.
+
+    Parses the ``input_output_alias={ {0}: (1, {}, may-alias) }`` header
+    attribute — the form XLA actually acts on (the lowered markers above are
+    requests; this is the grant).  Returns one entry per aliased output,
+    e.g. ``[1]`` when output 0 reuses parameter 1's buffer.
+    """
+    out: list[int] = []
+    for line in compiled_text.splitlines():
+        if "input_output_alias={" not in line:
+            continue
+        body = line.split("input_output_alias={", 1)[1]
+        depth = 1
+        end = 0
+        for i, ch in enumerate(body):
+            depth += (ch == "{") - (ch == "}")
+            if depth == 0:
+                end = i
+                break
+        out.extend(int(p) for p in _ALIAS_ENTRY_RE.findall(body[:end]))
+    return out
+
+
 def collective_bytes(hlo_text: str, trip_counts: dict[str, int] | None = None) -> int:
     """Sum of operand bytes over every collective op.
 

@@ -1,0 +1,335 @@
+"""AST lint over every registered :class:`MethodDef` body.
+
+PR 5 made one definition per method drive four backends; the flip side is
+that one *bad idiom* in a definition now breaks four backends — usually not
+at registration but deep inside a shard_map trace, as an opaque tracer
+error, or (worst) silently on just one backend.  This pass rejects the four
+idioms with exactly that failure mode, at lint time:
+
+* **Python branching on traced state** (``if rr < tol:`` inside ``step``):
+  works under eager numpy-like debugging, raises a ``TracerBoolConversionError``
+  under ``jit``, and would change the compiled collective schedule per
+  branch if it traced.  Control flow on traced values belongs in
+  ``lax.cond``/``lax.while_loop`` (the generic driver owns the loop).
+
+* **Closures over mutable globals**: a list/dict/set captured by a method
+  body is invisible re-entrant state — two sessions compiling the same
+  method could observe each other's mutations.  All tuning knobs go through
+  ``ops.params`` (declared in ``MethodDef.params``).
+
+* **Calls outside the operator protocol**: the body may touch only the
+  declared ``Ops``/operator surface (``OPS_PROTOCOL``/``OPERATOR_PROTOCOL``
+  in ``repro.core.methods``).  Anything else — say ``ops.A.layout.mesh`` —
+  couples the definition to one backend and breaks the
+  write-once/parallelise-underneath contract.
+
+* **State-layout mismatches**: the declared ``vectors``/``scalars`` must be
+  exactly what ``init`` produces and ``step`` preserves (shape AND dtype —
+  ``lax.while_loop`` requires a stable carry).  Verified abstractly via
+  ``jax.eval_shape`` on a tiny local problem; no kernels execute.
+
+Scope note: the lint sees the registered functions' own ASTs (including
+factory-made closures), not helpers they call — helpers are shared across
+methods and covered by the backends' parity tests.
+"""
+
+from __future__ import annotations
+
+import ast
+import inspect
+import textwrap
+
+from repro.analysis.violation import Violation
+from repro.core.methods import (
+    METHODS,
+    OPERATOR_PROTOCOL,
+    OPS_PROTOCOL,
+    MethodDef,
+    Ops,
+)
+
+#: dict-protocol attrs allowed on ``ops.params`` (a plain dict of knobs)
+_PARAMS_ATTRS = frozenset({"get", "items", "keys", "values"})
+
+_MUTABLE_TYPES = (list, dict, set, bytearray)
+
+_FN_KINDS = ("init", "step", "finalize", "fused_init", "fused_step")
+
+
+def _method_functions(mdef: MethodDef):
+    for kind in _FN_KINDS:
+        fn = getattr(mdef, kind)
+        if fn is not None:
+            yield kind, fn
+
+
+def _function_node(fn) -> ast.FunctionDef:
+    src = textwrap.dedent(inspect.getsource(fn))
+    tree = ast.parse(src)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef):
+            return node
+    raise ValueError(f"no function definition found in source of {fn!r}")
+
+
+def _names(node: ast.AST) -> set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def _attr_chain(node: ast.Attribute) -> list[str] | None:
+    """``ops.A.base.matvec`` -> ["ops", "A", "base", "matvec"]; None when the
+    chain is not rooted at a plain name (e.g. a subscript)."""
+    parts: list[str] = []
+    cur: ast.AST = node
+    while isinstance(cur, ast.Attribute):
+        parts.append(cur.attr)
+        cur = cur.value
+    if isinstance(cur, ast.Name):
+        parts.append(cur.id)
+        return parts[::-1]
+    return None
+
+
+def _where(mdef_name: str, kind: str, fn, node: ast.AST) -> str:
+    line = fn.__code__.co_firstlineno + getattr(node, "lineno", 1) - 1
+    return f"{fn.__code__.co_filename}:{line} ({mdef_name}.{kind})"
+
+
+def _assign_targets(stmt: ast.AST) -> list[ast.AST]:
+    if isinstance(stmt, ast.Assign):
+        return list(stmt.targets)
+    if isinstance(stmt, (ast.AugAssign, ast.AnnAssign, ast.For)):
+        return [stmt.target]
+    return []
+
+
+def _rhs(stmt: ast.AST) -> ast.AST | None:
+    if isinstance(stmt, (ast.Assign, ast.AugAssign)):
+        return stmt.value
+    if isinstance(stmt, ast.AnnAssign):
+        return stmt.value
+    if isinstance(stmt, ast.For):
+        return stmt.iter
+    return None
+
+
+def _ops_rooted_value(node: ast.AST, ops_name: str) -> bool:
+    """Does the expression read the ops context (anything but ``ops.params``)?
+
+    Every such read — ``ops.b``, ``ops.matvec(p)``, ``ops.dotn(...)`` —
+    yields a traced value inside jit, so it taints its targets.  Only the
+    static knob dict ``ops.params`` is exempt.
+    """
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Attribute):
+            chain = _attr_chain(sub)
+            if chain and chain[0] == ops_name and chain[1:2] != ["params"]:
+                return True
+    return False
+
+
+def _tainted_names(fdef: ast.FunctionDef, ops_name: str) -> set[str]:
+    """Names carrying traced values: the non-ops parameters (state/x0) plus
+    everything transitively assigned from them or from ops reads."""
+    tainted = {a.arg for a in fdef.args.args if a.arg != ops_name}
+    changed = True
+    while changed:
+        changed = False
+        for stmt in ast.walk(fdef):
+            rhs = _rhs(stmt)
+            if rhs is None:
+                continue
+            if _names(rhs) & tainted or _ops_rooted_value(rhs, ops_name):
+                for tgt in _assign_targets(stmt):
+                    new = _names(tgt) - tainted
+                    if new:
+                        tainted |= new
+                        changed = True
+    return tainted
+
+
+def _branch_violations(mdef_name, kind, fn, fdef, ops_name) -> list[Violation]:
+    tainted = _tainted_names(fdef, ops_name)
+    out = []
+    for node in ast.walk(fdef):
+        if not isinstance(node, (ast.If, ast.While, ast.IfExp, ast.Assert)):
+            continue
+        test = node.test
+        hot = (_names(test) & tainted) or _ops_rooted_value(test, ops_name)
+        if hot:
+            out.append(Violation(
+                pass_name="lint_methods",
+                subject=f"method:{mdef_name}",
+                field="traced_branch",
+                expected="lax.cond/lax.while_loop for traced control flow",
+                actual=f"Python {type(node).__name__} on traced value(s) "
+                       f"{sorted(_names(test) & tainted)}",
+                detail=_where(mdef_name, kind, fn, node)))
+    return out
+
+
+def _closure_violations(mdef_name, kind, fn) -> list[Violation]:
+    out = []
+    if fn.__closure__:
+        for var, cell in zip(fn.__code__.co_freevars, fn.__closure__):
+            try:
+                val = cell.cell_contents
+            except ValueError:      # unfilled cell
+                continue
+            if isinstance(val, _MUTABLE_TYPES):
+                out.append(Violation(
+                    pass_name="lint_methods",
+                    subject=f"method:{mdef_name}",
+                    field="mutable_closure",
+                    expected="immutable captures (pass knobs via ops.params)",
+                    actual=f"closure over {type(val).__name__} {var!r}",
+                    detail=f"{fn.__code__.co_filename} ({mdef_name}.{kind})"))
+    g = fn.__globals__
+    for name in fn.__code__.co_names:
+        if name in g and isinstance(g[name], _MUTABLE_TYPES):
+            out.append(Violation(
+                pass_name="lint_methods",
+                subject=f"method:{mdef_name}",
+                field="mutable_global",
+                expected="immutable globals (pass knobs via ops.params)",
+                actual=f"reads mutable global {name!r} "
+                       f"({type(g[name]).__name__})",
+                detail=f"{fn.__code__.co_filename} ({mdef_name}.{kind})"))
+    return out
+
+
+def _protocol_violations(mdef_name, kind, fn, fdef, ops_name) -> list[Violation]:
+    out = []
+    seen: set[tuple] = set()
+    for node in ast.walk(fdef):
+        if not isinstance(node, ast.Attribute):
+            continue
+        chain = _attr_chain(node)
+        if not chain or chain[0] != ops_name or len(chain) < 2:
+            continue
+        attr, allowed, depth = None, None, None
+        if len(chain) == 2:
+            attr, allowed, depth = chain[1], OPS_PROTOCOL, "ops"
+        elif chain[1] == "A" and len(chain) >= 3:
+            # ops.A.x and ops.A.base.x are both operator-protocol surface
+            i = 3 if chain[2] == "base" and len(chain) >= 4 else 2
+            attr, allowed, depth = chain[i], OPERATOR_PROTOCOL, "ops.A"
+        elif chain[1] == "params" and len(chain) >= 3:
+            attr, allowed, depth = chain[2], _PARAMS_ATTRS, "ops.params"
+        if attr is not None and attr not in allowed and (depth, attr) not in seen:
+            seen.add((depth, attr))
+            out.append(Violation(
+                pass_name="lint_methods",
+                subject=f"method:{mdef_name}",
+                field="protocol_escape",
+                expected=f"{depth}.<attr> with attr in the declared protocol",
+                actual=f"{depth}.{attr}",
+                detail=_where(mdef_name, kind, fn, node)))
+    return out
+
+
+# --- state layout ------------------------------------------------------------
+
+_LAYOUT_GRID = (4, 4, 4)
+
+
+def _layout_ops(fused: bool):
+    from repro.core.problems import make_problem
+    from repro.core.solvers import LocalOp
+
+    import jax.numpy as jnp
+
+    prob = make_problem(_LAYOUT_GRID, "7pt")
+    A = LocalOp(prob.stencil)
+    if fused:
+        from repro.kernels.pallas_op import PallasOp
+        A = PallasOp(A)
+    b = jnp.ones(prob.shape, prob.dtype)
+    return Ops(A, b, norm_ref=1.0), prob
+
+
+def _layout_violations(mdef: MethodDef) -> list[Violation]:
+    """Declared ``vectors``/``scalars`` vs what init/step abstractly produce."""
+    import jax
+
+    out = []
+    for fused in (False, True):
+        if fused and not mdef.has_fused_body:
+            continue
+        init = mdef.fused_init if fused else mdef.init
+        step = mdef.fused_step if fused else mdef.step
+        tag = f"method:{mdef.name}" + ("|pallas" if fused else "")
+        ops, prob = _layout_ops(fused)
+        x0 = jax.ShapeDtypeStruct(prob.shape, prob.dtype)
+        try:
+            state = jax.eval_shape(lambda x: tuple(init(ops, x)), x0)
+        except Exception as e:  # noqa: BLE001 — any trace error IS the finding
+            out.append(Violation(
+                "lint_methods", tag, "state_layout",
+                expected="init traces under eval_shape",
+                actual=f"{type(e).__name__}: {e}"))
+            continue
+        nv, ns = len(mdef.vectors), len(mdef.scalars)
+        if len(state) != nv + ns:
+            out.append(Violation(
+                "lint_methods", tag, "state_layout",
+                expected=f"{nv} vectors + {ns} scalars "
+                         f"({mdef.vectors} + {mdef.scalars})",
+                actual=f"init produced {len(state)} slots"))
+            continue
+        for i, sds in enumerate(state):
+            want = prob.shape if i < nv else ()
+            slot = (mdef.vectors + mdef.scalars)[i]
+            if tuple(sds.shape) != tuple(want):
+                out.append(Violation(
+                    "lint_methods", tag, "state_layout",
+                    expected=f"slot {slot!r} shape {want}",
+                    actual=f"shape {tuple(sds.shape)}"))
+        try:
+            stepped = jax.eval_shape(lambda s: tuple(step(ops, s)), state)
+        except Exception as e:  # noqa: BLE001
+            out.append(Violation(
+                "lint_methods", tag, "state_layout",
+                expected="step traces under eval_shape",
+                actual=f"{type(e).__name__}: {e}"))
+            continue
+        if [(tuple(s.shape), str(s.dtype)) for s in stepped] != \
+           [(tuple(s.shape), str(s.dtype)) for s in state]:
+            out.append(Violation(
+                "lint_methods", tag, "state_layout",
+                expected="step preserves the init state layout "
+                         "(lax.while_loop carry stability)",
+                actual=f"init {[tuple(s.shape) for s in state]} vs "
+                       f"step {[tuple(s.shape) for s in stepped]}"))
+    return out
+
+
+def check_method(mdef: MethodDef, *, layout: bool = True) -> list[Violation]:
+    """All lint findings for one MethodDef."""
+    out: list[Violation] = []
+    for kind, fn in _method_functions(mdef):
+        try:
+            fdef = _function_node(fn)
+        except (OSError, TypeError, ValueError) as e:
+            out.append(Violation(
+                "lint_methods", f"method:{mdef.name}", "source",
+                expected="inspectable Python source for every body",
+                actual=f"{type(e).__name__}: {e}", detail=kind))
+            continue
+        ops_name = fdef.args.args[0].arg if fdef.args.args else "ops"
+        out += _branch_violations(mdef.name, kind, fn, fdef, ops_name)
+        out += _closure_violations(mdef.name, kind, fn)
+        out += _protocol_violations(mdef.name, kind, fn, fdef, ops_name)
+    if layout:
+        out += _layout_violations(mdef)
+    return out
+
+
+def check_methods(methods: dict[str, MethodDef] | None = None, *,
+                  layout: bool = True) -> list[Violation]:
+    """Lint every registered MethodDef (or an injected table, for tests)."""
+    methods = METHODS if methods is None else methods
+    out: list[Violation] = []
+    for name in sorted(methods):
+        out += check_method(methods[name], layout=layout)
+    return out

@@ -1,0 +1,40 @@
+"""The one result type every analysis pass emits.
+
+A :class:`Violation` is a machine-checkable contract breach: which pass
+found it, what it looked at, which field drifted, and the expected-vs-actual
+pair.  The CLI (``python -m repro.analysis``) renders them and fails CI on
+any; tests assert on (pass_name, subject, field) triples.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    pass_name: str      # "comms" | "donation" | "lint_methods" | "lint_kernels" | "registry" | "baseline"
+    subject: str        # e.g. "cg|1d|concat|xla|none", "method:cg", "kernel:spmv"
+    field: str          # e.g. "all-reduce", "vmem_bytes", "traced_branch"
+    expected: object
+    actual: object
+    detail: str = ""
+
+    def __str__(self) -> str:
+        s = (f"[{self.pass_name}] {self.subject} :: {self.field}: "
+             f"expected {self.expected!r}, got {self.actual!r}")
+        return f"{s} — {self.detail}" if self.detail else s
+
+
+def format_violations(violations: list[Violation]) -> str:
+    if not violations:
+        return "no violations"
+    by_pass: dict[str, list[Violation]] = {}
+    for v in violations:
+        by_pass.setdefault(v.pass_name, []).append(v)
+    lines = []
+    for pass_name in sorted(by_pass):
+        vs = by_pass[pass_name]
+        lines.append(f"{pass_name}: {len(vs)} violation(s)")
+        lines.extend(f"  {v}" for v in vs)
+    return "\n".join(lines)

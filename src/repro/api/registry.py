@@ -58,6 +58,17 @@ class SolverSpec:
     precond_applies_per_iter: int = 0  # M^{-1} applications per iteration
     reduce_hide: str = "none"         # reduction scheduling (REDUCE_HIDES)
     fused_kernels: tuple[str, ...] = ()  # Pallas fused-body capability
+    #: COMPILED all-reduces per iteration body — what `python -m
+    #: repro.analysis` asserts on the HLO of every mesh shape.  Defaults to
+    #: ``reductions_per_iter``; set explicitly where the implementation fuses
+    #: logical reductions into one collective (pcg rides r·z and r·r on a
+    #: single psum pair, so 3 logical reductions compile to 2 all-reduces).
+    allreduces_per_iter: int | None = None
+    #: halo exchanges (``pad_exchange`` calls) per iteration body; each one
+    #: compiles to ``2 × n_split_dims`` collective-permutes.  Defaults to
+    #: ``spmvs_per_iter``; the Gauss-Seidel sweeps exchange per plane/colour
+    #: half-sweep plus once for the residual matvec, so they set it higher.
+    halo_exchanges_per_iter: int | None = None
     description: str = ""
     #: the single-source algorithm definition (repro.core.methods); attached
     #: and cross-validated by register_solver — every metadata field that IS
@@ -90,6 +101,28 @@ class SolverSpec:
                 f"{self.name!r}: a pipelined variant's single reduction "
                 f"hides behind the next SpMV — reduction_hides must be "
                 f"('pipe',)")
+        if self.allreduces_per_iter is None:
+            object.__setattr__(
+                self, "allreduces_per_iter", self.reductions_per_iter)
+        if self.halo_exchanges_per_iter is None:
+            object.__setattr__(
+                self, "halo_exchanges_per_iter", self.spmvs_per_iter)
+        if self.reduce_hide != "none" and self.allreduces_per_iter != 1:
+            raise ValueError(
+                f"{self.name!r}: reduce_hide={self.reduce_hide!r} claims ONE "
+                f"stacked reduction but allreduces_per_iter="
+                f"{self.allreduces_per_iter}")
+        if self.allreduces_per_iter > self.reductions_per_iter:
+            raise ValueError(
+                f"{self.name!r}: allreduces_per_iter "
+                f"({self.allreduces_per_iter}) exceeds the declared logical "
+                f"reductions ({self.reductions_per_iter}) — fusing can only "
+                f"reduce the collective count")
+        if self.halo_exchanges_per_iter < self.spmvs_per_iter:
+            raise ValueError(
+                f"{self.name!r}: halo_exchanges_per_iter "
+                f"({self.halo_exchanges_per_iter}) below spmvs_per_iter "
+                f"({self.spmvs_per_iter}) — every SpMV needs its halos")
 
     @property
     def reductions_per_iter(self) -> int:
@@ -117,12 +150,43 @@ REGISTRY: dict[str, SolverSpec] = {}
 
 class RegistryConsistencyError(RuntimeError):
     """The registry drifted from what ``core.solvers``/``core.methods``
-    export."""
+    export.  The message renders every mismatched field as an
+    expected-vs-actual table (method, field, registry value, derived value)
+    so a drifted registration reads as a diff, not a bare assertion."""
 
 
-def _validate_against_method(spec: SolverSpec, mdef: MethodDef) -> None:
-    """Registry metadata that is derivable from the MethodDef must agree
-    with it — the definition is the single source of truth."""
+@dataclasses.dataclass(frozen=True)
+class FieldDiff:
+    """One registry-vs-derived mismatch (a row of the consistency report)."""
+
+    method: str
+    field: str
+    registry_value: object
+    derived_value: object
+
+    def __str__(self) -> str:
+        return (f"{self.method}.{self.field}: registry declares "
+                f"{self.registry_value!r}, derived says {self.derived_value!r}")
+
+
+def format_field_diffs(diffs: list[FieldDiff]) -> str:
+    """Render mismatches as an aligned expected-vs-actual table."""
+    rows = [("method", "field", "registry", "derived")]
+    rows += [(d.method, d.field, repr(d.registry_value), repr(d.derived_value))
+             for d in diffs]
+    widths = [max(len(r[c]) for r in rows) for c in range(4)]
+    lines = ["  ".join(cell.ljust(w) for cell, w in zip(row, widths)).rstrip()
+             for row in rows]
+    lines.insert(1, "  ".join("-" * w for w in widths))
+    return "\n".join(lines)
+
+
+def method_field_diff(spec: SolverSpec, mdef: MethodDef) -> list[FieldDiff]:
+    """Registry fields that are derivable from the MethodDef but disagree
+    with it — the definition is the single source of truth.  Empty list ==
+    consistent.  Exported for ``repro.analysis`` (the audit re-runs this
+    diff across the whole registry instead of trusting the import-time
+    check ran under the same code)."""
     derived = {
         "stationary": mdef.stationary,
         "accepts_precond": mdef.accepts_precond,
@@ -130,12 +194,19 @@ def _validate_against_method(spec: SolverSpec, mdef: MethodDef) -> None:
         "variant_of": mdef.variant_of,
         "fused_kernels": mdef.fused_kernels,
     }
-    for field, want in derived.items():
-        have = getattr(spec, field)
-        if have != want:
-            raise RegistryConsistencyError(
-                f"{spec.name!r}: registry declares {field}={have!r} but the "
-                f"MethodDef says {want!r}")
+    return [
+        FieldDiff(spec.name, field, getattr(spec, field), want)
+        for field, want in derived.items()
+        if getattr(spec, field) != want
+    ]
+
+
+def _validate_against_method(spec: SolverSpec, mdef: MethodDef) -> None:
+    diffs = method_field_diff(spec, mdef)
+    if diffs:
+        raise RegistryConsistencyError(
+            f"{spec.name!r} drifted from its MethodDef:\n"
+            + format_field_diffs(diffs))
 
 
 def register_solver(spec: SolverSpec) -> SolverSpec:
@@ -189,12 +260,14 @@ register_solver(SolverSpec(
     name="gauss_seidel_rb", fn=_solvers.sym_gauss_seidel_rb,
     reduction_hides=("none",), spmvs_per_iter=2, stationary=True,
     halo_hides=("none", "none"),
+    halo_exchanges_per_iter=5,   # 4 colour half-sweeps + the residual matvec
     description="red-black coloured symmetric Gauss-Seidel (§3.4)"))
 
 register_solver(SolverSpec(
     name="gauss_seidel", fn=_solvers.sym_gauss_seidel_relaxed,
     reduction_hides=("none",), spmvs_per_iter=2, stationary=True,
     halo_hides=("none", "none"),
+    halo_exchanges_per_iter=3,   # fwd + bwd plane sweeps + residual matvec
     variant_of="gauss_seidel_rb",
     description="relaxed tasked symmetric GS (§3.4 Code 4, TPU adaptation)"))
 
@@ -213,6 +286,7 @@ register_solver(SolverSpec(
     name="pcg", fn=_solvers.pcg,
     reduction_hides=("none", "none", "vec"), spmvs_per_iter=1,
     spd_required=True, variant_of="cg",
+    allreduces_per_iter=2,       # the (r·z, r·r) pair rides ONE psum (dot2)
     accepts_precond=True, precond_applies_per_iter=1,
     description="preconditioned CG (repro.precond): p·Ap and r·z block, "
                 "r·r feeds only the check; +0 reductions from the "

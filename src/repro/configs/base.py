@@ -10,7 +10,6 @@ tiny widths); the FULL config is only ever touched through the dry-run's
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
 
 SHAPES = {
     # name: (seq_len, global_batch, kind)

@@ -22,7 +22,6 @@ the other dims, so later exchanges forward previously received halos and the
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Callable
 
 import jax

@@ -121,6 +121,26 @@ def _hist_init(maxiter: int, v0, dtype) -> jax.Array:
     return h.at[0].set(v0.astype(dtype))
 
 
+#: the FULL surface a MethodDef body may touch on its ``ops`` context — the
+#: write-once/parallelise-underneath contract, stated once so the AST lint
+#: (``repro.analysis.lint_methods``) and the humans reading this file agree.
+#: A method body calling anything else is coupling itself to one backend.
+OPS_PROTOCOL = frozenset({
+    "A", "b", "M", "dot", "dot2", "dotn", "matvec", "diag", "norm_ref",
+    "params",
+})
+
+#: what a MethodDef may touch on the operator itself (``ops.A`` — the
+#: LocalOp/DistributedOp/PallasOp protocol).  ``base`` unwraps a PallasOp to
+#: its inner operator; ``spmv_dots``/``cg_body`` are the fused-kernel hooks
+#: the ``fused_step`` bodies target.
+OPERATOR_PROTOCOL = frozenset({
+    "matvec", "matvec_local", "pad_exchange", "diag", "stencil", "dot",
+    "dot2", "dotn", "sum_partials", "split_dims", "base", "spmv_dots",
+    "cg_body",
+})
+
+
 class Ops:
     """The execution context a :class:`MethodDef` runs against.
 

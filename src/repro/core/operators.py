@@ -18,7 +18,6 @@ sparse matrix) and doubles as the cross-check oracle for the stencil path.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Sequence
 
 import numpy as np

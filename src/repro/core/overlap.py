@@ -26,6 +26,7 @@ __all__ = [
     "count_collectives",
     "collective_bytes",
     "overlap_slack",
+    "parse_computations",
     "iteration_overlap_report",
     "blocking_reductions",
     "halo_slack",

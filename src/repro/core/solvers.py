@@ -32,7 +32,6 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core import methods as _methods
 from repro.core.methods import (  # noqa: F401  (compat re-exports)
     METHODS,
     MethodDef,

@@ -17,7 +17,6 @@ from __future__ import annotations
 from typing import Any
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # leaf name -> spec of the LAST len(spec) dims
@@ -167,7 +166,6 @@ def batch_specs(batch: Any, mesh: Mesh,
     over model where profitable."""
     dp = dp_axes if dp_axes is not None else dp_axes_of(mesh)
     tp_in_dp = "model" in dp
-    dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
 
     def spec(path, leaf):
         keys = [str(getattr(p, "key", p)) for p in path]

@@ -115,8 +115,8 @@ def fused_cg_body(
     s: jax.Array,
     w: jax.Array,
     *,
-    br: int = 256,
-    interpret: bool = True,
+    br: int = 128,   # 9 live blocks (5 in + 4 out): br=256 would double-buffer
+    interpret: bool = True,  # past 16 MiB VMEM (repro.analysis.lint_kernels)
 ):
     """One merged-CG iteration's four vector updates in one VMEM pass.
 

@@ -9,12 +9,9 @@ can run on either implementation (tests assert they agree).
 
 from __future__ import annotations
 
-import functools
-
 import jax
 
 from repro.core.operators import Stencil
-from repro.kernels import ref
 from repro.kernels.cg_fused_update import (
     cg_fused_update as _cg_fused_update,
     fused_cg_body as _fused_cg_body,

@@ -31,7 +31,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.analysis.hlo import collective_bytes, count_collectives, parse_computations
+from repro.analysis.hlo import collective_bytes, count_collectives
 from repro.core.compat import cost_analysis
 from repro.configs.base import SHAPES, all_configs, get_config
 from repro.distributed.sharding import (
@@ -61,7 +61,6 @@ def _ctx(cfg, mesh, profile: str = "tp") -> ModelCtx:
     """profile: "tp" (baseline TP+SP) | "fsdp" (batch over both axes; the
     recommended layout for small-d archs — EXPERIMENTS.md §Perf-2b)."""
     if profile == "fsdp":
-        from repro.distributed.sharding import recommended_dp_axes
         dp = tuple(a for a in ("pod", "data", "model")
                    if a in mesh.axis_names)
     else:

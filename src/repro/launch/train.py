@@ -23,7 +23,6 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding
 
 from repro.configs.base import get_config
 from repro.data.pipeline import PipelineConfig, Prefetcher, SyntheticSource, batches
@@ -31,9 +30,7 @@ from repro.distributed.compression import init_error_feedback, make_ef_int8_tran
 from repro.distributed.sharding import (
     batch_shardings,
     dp_axes_of,
-    opt_state_specs,
     param_shardings,
-    param_specs,
 )
 from repro.launch.mesh import make_mesh_for_devices
 from repro.models import steps as steps_mod

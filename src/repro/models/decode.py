@@ -11,7 +11,6 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.configs.base import ArchConfig
 from repro.distributed.sharding import make_hint
 from repro.models import attention as attn_mod
 from repro.models import mlp as mlp_mod
@@ -21,7 +20,6 @@ from repro.models.common import rms_norm
 from repro.models.transformer import (
     ModelCtx,
     _maybe_post,
-    _window_flags,
     embed_tokens,
     layer_kind,
     logits_from_h,

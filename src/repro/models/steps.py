@@ -18,7 +18,6 @@ from repro.models.transformer import (
     ModelCtx,
     forward,
     forward_hidden,
-    init_params,
     logits_from_h,
 )
 from repro.optim.adamw import AdamW

@@ -14,7 +14,6 @@ local/global) or super-layer grouping (llama4 dense+moe pairs).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any
 
 import jax
@@ -264,7 +263,6 @@ def forward_hidden(ctx: ModelCtx, params, batch, *, collect_kv: bool = False):
     h = sp(h)
     positions = batch["positions"]
 
-    enc_kv = None
     if cfg.enc_dec:
         src = (batch["src_embeds"] * cfg.embed_scale).astype(ctx.dtype)
         src_pos = batch["src_positions"]
@@ -304,8 +302,6 @@ def _scan_layers_enc(ctx: ModelCtx, stacked, h, positions):
 
 
 def _scan_superlayers(ctx: ModelCtx, stacked, h, positions, *, collect_kv):
-    cfg = ctx.cfg
-
     def f(h, p2):
         h, (kv0, _) = _layer_forward(ctx, p2["dense"], h, positions, window=0,
                                      kind="dense")

@@ -15,7 +15,7 @@ from typing import Any
 import jax
 from jax.sharding import Mesh, NamedSharding
 
-from repro.distributed.sharding import param_shardings, param_specs
+from repro.distributed.sharding import param_shardings
 from repro.optim.adamw import AdamWState
 
 

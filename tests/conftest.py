@@ -1,9 +1,48 @@
 # NOTE: deliberately NO xla_force_host_platform_device_count here — smoke
 # tests and benches must see 1 device (the dry-run sets 512 inside its own
-# process).  Multi-device distributed tests run via subprocess (see
-# tests/test_distributed_solvers.py).
+# process).  Multi-device distributed tests run via subprocess: see
+# run_multidevice() below.
+import json
+import os
+import subprocess
+import sys
+
 import jax
 import pytest
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_multidevice(script: str, *, devices: int | None = 8,
+                    env: dict | None = None, timeout: int = 560) -> dict:
+    """Run ``script`` in a fresh interpreter with ``devices`` host devices
+    and parse its LAST stdout line as JSON.
+
+    The shared harness for every multi-device test: host-device count is
+    fixed at jax import, so the main pytest process must keep seeing one
+    device and anything needing a mesh runs out-of-process.  The subprocess
+    gets ``XLA_FLAGS=--xla_force_host_platform_device_count=<devices>``
+    (skipped when ``devices`` is None), ``PYTHONPATH=src`` and the repo root
+    as cwd; extra ``env`` entries are merged on top.  Asserts a zero exit
+    status (stderr tail in the failure message) — import it from conftest:
+    ``from conftest import run_multidevice``.
+    """
+    full = dict(os.environ)
+    if devices is not None:
+        full["XLA_FLAGS"] = (full.get("XLA_FLAGS", "") +
+                             f" --xla_force_host_platform_device_count="
+                             f"{devices}").strip()
+    full["PYTHONPATH"] = (os.path.join(REPO_ROOT, "src") + os.pathsep +
+                          full.get("PYTHONPATH", ""))
+    if env:
+        full.update(env)
+    proc = subprocess.run(
+        [sys.executable, "-c", script],
+        capture_output=True, text=True, timeout=timeout, env=full,
+        cwd=REPO_ROOT,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    return json.loads(proc.stdout.strip().splitlines()[-1])
 
 
 @pytest.fixture(scope="session")

@@ -4,14 +4,10 @@ must produce bit-for-bit the same ``SolveResult`` as calling the solver
 functions directly, on both the local and the shard_map path, and
 ``solve_batched`` must match per-RHS single solves."""
 
-import json
-import os
-import subprocess
-import sys
-
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import run_multidevice
 
 from repro.api import (
     REGISTRY,
@@ -299,13 +295,7 @@ print(json.dumps(out))
 
 @pytest.fixture(scope="module")
 def shard_results():
-    proc = subprocess.run(
-        [sys.executable, "-c", _SHARD_SCRIPT],
-        capture_output=True, text=True, timeout=560,
-        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-    )
-    assert proc.returncode == 0, proc.stderr[-3000:]
-    return json.loads(proc.stdout.strip().splitlines()[-1])
+    return run_multidevice(_SHARD_SCRIPT)
 
 
 def test_shard_backend_resolution(shard_results):

@@ -7,12 +7,8 @@ parallelism (qwen3 reduced: 8 experts over tp=4), MHA sharding (minicpm),
 and the cache-sequence-parallel decode path.
 """
 
-import json
-import os
-import subprocess
-import sys
-
 import pytest
+from conftest import run_multidevice
 
 # the multi-arch sweep costs minutes; stays in tier-1 (plain pytest) but is
 # deselectable for quick loops via -m "not slow"
@@ -85,13 +81,7 @@ print(json.dumps(out))
 
 @pytest.fixture(scope="module")
 def results():
-    proc = subprocess.run(
-        [sys.executable, "-c", _SCRIPT],
-        capture_output=True, text=True, timeout=560,
-        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-    )
-    assert proc.returncode == 0, proc.stderr[-3000:]
-    return json.loads(proc.stdout.strip().splitlines()[-1])
+    return run_multidevice(_SCRIPT)
 
 
 @pytest.mark.parametrize("arch", ["internlm2-1.8b", "qwen3-moe-235b-a22b",

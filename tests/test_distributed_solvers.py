@@ -12,12 +12,10 @@ fixture runs the script twice — the "algo" run with the fusion passes
 disabled via XLA_FLAGS — and merges the two JSON payloads.
 """
 
-import json
 import os
-import subprocess
-import sys
 
 import pytest
+from conftest import run_multidevice
 
 # multi-minute 8-device subprocess sweep; tier-1 (plain pytest) still runs it
 pytestmark = pytest.mark.slow
@@ -87,19 +85,12 @@ print(json.dumps(out))
 
 
 def _run(view: str) -> dict:
-    env = dict(os.environ)
-    env["TRACE_VIEW"] = view
+    env = {"TRACE_VIEW": view}
     if view == "algo":
-        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+        env["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
                             " --xla_disable_hlo_passes="
                             "fusion,cpu-instruction-fusion").strip()
-    proc = subprocess.run(
-        [sys.executable, "-c", _SCRIPT],
-        capture_output=True, text=True, timeout=560, env=env,
-        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-    )
-    assert proc.returncode == 0, proc.stderr[-3000:]
-    return json.loads(proc.stdout.strip().splitlines()[-1])
+    return run_multidevice(_SCRIPT, env=env)
 
 
 @pytest.fixture(scope="module")

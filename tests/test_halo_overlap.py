@@ -20,12 +20,10 @@ with the fusion passes disabled for the slack view — the dependence-graph
 measurement, like tests/test_distributed_solvers.py's barrier traces.
 """
 
-import json
 import os
-import subprocess
-import sys
 
 import pytest
+from conftest import run_multidevice
 
 _SCRIPT = r"""
 import os
@@ -96,19 +94,12 @@ print(json.dumps(out))
 
 
 def _run(view: str) -> dict:
-    env = dict(os.environ)
-    env["TRACE_VIEW"] = view
+    env = {"TRACE_VIEW": view}
     if view == "slack":
-        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+        env["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
                             " --xla_disable_hlo_passes="
                             "fusion,cpu-instruction-fusion").strip()
-    proc = subprocess.run(
-        [sys.executable, "-c", _SCRIPT],
-        capture_output=True, text=True, timeout=560, env=env,
-        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-    )
-    assert proc.returncode == 0, proc.stderr[-3000:]
-    return json.loads(proc.stdout.strip().splitlines()[-1])
+    return run_multidevice(_SCRIPT, env=env)
 
 
 @pytest.fixture(scope="module")

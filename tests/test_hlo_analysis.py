@@ -3,14 +3,10 @@ plus the PR-4 acceptance claim: merged/pipelined Krylov iteration bodies
 compile to exactly ONE all-reduce on a real multi-device mesh, where the
 classics emit 2–3."""
 
-import json
-import os
-import subprocess
-import sys
-
 import jax
 import jax.numpy as jnp
 import pytest
+from conftest import run_multidevice
 
 from repro.analysis.hlo import (
     collective_bytes,
@@ -85,11 +81,7 @@ ENTRY %main (x: f32[64], y: f32[64]) -> f32[64] {
 # -----------------------------------------------------------------------------
 
 _COUNT_SCRIPT = r"""
-import os
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
-                           " --xla_force_host_platform_device_count=8").strip()
-import sys, json
-sys.path.insert(0, "src")
+import json
 import jax
 jax.config.update("jax_enable_x64", True)
 from repro.core.compat import make_mesh
@@ -118,13 +110,7 @@ print(json.dumps(out))
 
 @pytest.fixture(scope="module")
 def allreduce_counts():
-    proc = subprocess.run(
-        [sys.executable, "-c", _COUNT_SCRIPT],
-        capture_output=True, text=True, timeout=560,
-        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-    )
-    assert proc.returncode == 0, proc.stderr[-3000:]
-    return json.loads(proc.stdout.strip().splitlines()[-1])
+    return run_multidevice(_COUNT_SCRIPT)
 
 
 def test_classics_emit_multiple_allreduces(allreduce_counts):

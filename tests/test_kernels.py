@@ -123,6 +123,33 @@ def test_rb_gs_half_sweep(stencil, colour):
                                rtol=1e-12, atol=1e-12)
 
 
+@pytest.mark.parametrize("stencil", STENCILS, ids=lambda s: s.name)
+@pytest.mark.parametrize("shape", SHAPES)
+def test_cheb_fused_step(stencil, shape):
+    """Fused Chebyshev step: matvec + both axpby recurrences in one pass."""
+    ks = jax.random.split(jax.random.PRNGKey(10), 3)
+    z, r, d = (jax.random.normal(k, shape, jnp.float64) for k in ks)
+    zp = jnp.pad(z, 1)
+    zn, dn = ops.cheb_step(zp, r, d, stencil, a=0.4, c=1.3)
+    znr, dnr = ref.cheb_fused_step_ref(zp, r, d, stencil=stencil, a=0.4, c=1.3)
+    np.testing.assert_allclose(np.asarray(zn), np.asarray(znr),
+                               rtol=1e-12, atol=1e-12)
+    np.testing.assert_allclose(np.asarray(dn), np.asarray(dnr),
+                               rtol=1e-12, atol=1e-12)
+
+
+@pytest.mark.parametrize("stencil", STENCILS, ids=lambda s: s.name)
+@pytest.mark.parametrize("omega", [1.0, 0.8])
+def test_block_jacobi_sweep(stencil, omega):
+    ks = jax.random.split(jax.random.PRNGKey(11), 2)
+    z, r = (jax.random.normal(k, (8, 8, 8), jnp.float64) for k in ks)
+    zp = jnp.pad(z, 1)
+    o = ops.jacobi_sweep(zp, r, stencil, omega=omega)
+    orf = ref.block_jacobi_sweep_ref(zp, r, stencil=stencil, omega=omega)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(orf),
+                               rtol=1e-12, atol=1e-12)
+
+
 @pytest.mark.parametrize("window", [0, 32])
 @pytest.mark.parametrize("dt", [jnp.float32], ids=str)
 def test_flash_attention(window, dt):

@@ -94,7 +94,6 @@ def test_interior_shell_split_matches_monolithic(stencil, formulation,
     mv = (stencil.conv_matvec_padded() if formulation == "conv"
           else stencil.matvec_padded)
     x = jax.random.normal(jax.random.PRNGKey(1), (6, 8, 10), jnp.float32)
-    pad = [(0, 0) if d in split_dims else (1, 1) for d in range(3)]
     # an arbitrary "exchanged" padded array: random halos on split dims
     xp = jax.random.normal(jax.random.PRNGKey(2), (8, 10, 12), jnp.float32)
     xp = xp.at[1:-1, 1:-1, 1:-1].set(x)

@@ -18,15 +18,11 @@ Covers the ISSUE-3 acceptance criteria:
     jnp path.
 """
 
-import json
-import os
-import subprocess
-import sys
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import run_multidevice
 
 from repro.api import REGISTRY, SolverOptions, SolverSession, solve
 from repro.core.operators import STENCIL_7PT, STENCIL_27PT, build_dense_from_stencil
@@ -392,13 +388,7 @@ print(json.dumps(out))
 
 @pytest.fixture(scope="module")
 def parity_results():
-    proc = subprocess.run(
-        [sys.executable, "-c", _PARITY_SCRIPT],
-        capture_output=True, text=True, timeout=560,
-        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-    )
-    assert proc.returncode == 0, proc.stderr[-3000:]
-    return json.loads(proc.stdout.strip().splitlines()[-1])
+    return run_multidevice(_PARITY_SCRIPT)
 
 
 def test_local_vs_shardmap_parity(parity_results):

@@ -11,7 +11,7 @@ import numpy as np
 import pytest
 
 from repro.api import SolverOptions, SolverSession
-from repro.runtime.monitor import FailureInjector, SimulatedFailure
+from repro.runtime.monitor import FailureInjector
 from repro.serve import (
     BucketKey,
     CacheEntry,

@@ -1,6 +1,5 @@
 """Solver correctness: convergence, variant equivalence, restart, criteria."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,10 +1,7 @@
 """End-to-end behaviour: the drivers run, solve, train, serve, and the
 reproduction's headline claims hold on the paper's own problem."""
 
-import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 
 def test_solve_driver_end_to_end():
