@@ -5,8 +5,8 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast verify smoke serve-smoke bench bench-kernels \
-	bench-precond examples lint audit audit-write
+.PHONY: test test-fast verify smoke serve-smoke obs-smoke bench \
+	bench-kernels bench-precond examples lint audit audit-write
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -57,6 +57,17 @@ bench-kernels:
 serve-smoke:
 	$(PYTHON) -m benchmarks.bench_serve --smoke
 	$(PYTHON) -m benchmarks.bench_serve --check BENCH_serve.json
+
+# observability smoke (CI gate): one traced telemetry solve + one traced
+# serve replay append to TRACE_obs.jsonl, then the summarizer schema-checks
+# every record (`--check` exits non-zero on any violation)
+obs-smoke:
+	rm -f TRACE_obs.jsonl
+	REPRO_TRACE=TRACE_obs.jsonl $(PYTHON) -m repro.launch.solve \
+	    --grid 32 32 32 --method cg --maxiter 60 --telemetry --json
+	$(PYTHON) -m repro.launch.serve --mode solver --buckets smoke \
+	    --trace TRACE_obs.jsonl --json
+	$(PYTHON) -m repro.obs summarize --check TRACE_obs.jsonl
 
 examples:
 	$(PYTHON) examples/quickstart.py

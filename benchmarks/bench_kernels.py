@@ -42,7 +42,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from benchmarks.common import csv
+from benchmarks.common import csv, trajectory_append, trajectory_row
 from repro.core.operators import STENCILS
 from repro.core.problems import enable_f64
 from repro.core.solvers import _cg_merged_scalars
@@ -246,6 +246,14 @@ def main(argv=None) -> dict:
         json.dump(record, f, indent=2, sort_keys=True)
         f.write("\n")
     print(f"[bench_kernels] wrote {args.out}")
+    hist = os.path.splitext(args.out)[0] + "_history.jsonl"
+    trajectory_append(hist, trajectory_row(
+        "kernels", smoke=bool(args.smoke), stencil=args.stencil,
+        fused_impl=record["meta"]["fused_impl"],
+        grids={k: {"per_iter_s": g["fused_iteration"],
+                   "fused_vs_classic_kernels": g["fused_vs_classic_kernels"]}
+               for k, g in record["grids"].items()}))
+    print(f"[bench_kernels] appended {hist}")
     # the regression gate: fusion losing to the fork-join kernel baseline
     # means a kernel (or its dispatch structure) regressed — fail loudly.
     # Same criterion as the standalone --check mode, by construction.

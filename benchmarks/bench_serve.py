@@ -31,25 +31,15 @@ import os
 
 import jax
 
-from benchmarks.common import csv
+from benchmarks.common import csv, trajectory_append, trajectory_row
 from repro.core.problems import enable_f64
-from repro.serve import (ServeConfig, SolverService, TraceBucket,
+# SMOKE_BUCKETS lives with the trace definitions since PR 8 (launch/serve.py
+# and make obs-smoke replay the same workload); re-exported here for
+# back-compat with callers that imported it from the bench
+from repro.serve import (SMOKE_BUCKETS, ServeConfig, SolverService,
                          generate_trace, replay)
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-#: the smoke trace: tiny grids, modest counts — the CI gate's workload
-SMOKE_BUCKETS = (
-    TraceBucket(grid=(8, 8, 8), method="cg", stencil="27pt", count=6,
-                maxiter=200),
-    TraceBucket(grid=(12, 12, 12), method="cg", stencil="7pt", count=6,
-                maxiter=200),
-    TraceBucket(grid=(8, 8, 8), method="bicgstab_b1", stencil="27pt",
-                count=6, maxiter=200),
-    TraceBucket(grid=(12, 12, 12), method="pcg", stencil="27pt",
-                precond="jacobi", precond_params=(("sweeps", 2),),
-                count=6, maxiter=200),
-)
 
 #: smoke-gate SLO bounds on the fixed CPU trace (generous: a CI container
 #: is noisy; these catch order-of-magnitude regressions, not jitter)
@@ -153,6 +143,12 @@ def main(argv=None) -> dict:
         json.dump(record, f, indent=2, sort_keys=True)
         f.write("\n")
     print(f"[bench_serve] wrote {args.out}")
+    hist = os.path.splitext(args.out)[0] + "_history.jsonl"
+    trajectory_append(hist, trajectory_row(
+        "serve", smoke=bool(args.smoke), scale=scale,
+        requests=len(trace), completed=len(results),
+        qps=snap["qps"], p50_s=snap["p50_s"], p99_s=snap["p99_s"]))
+    print(f"[bench_serve] appended {hist}")
     # same criterion as the standalone --check gate, by construction
     check_record(args.out)
     return record

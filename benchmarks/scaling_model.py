@@ -76,13 +76,14 @@ METHODS = {
 }
 
 
-def iteration_time(method: str, nbar: int, local_grid: tuple[int, int, int],
-                   chips: int, *, dtype_bytes: int = 8,
-                   decomposition: str = "1d", noise: str = "tpu",
-                   execution: str = "dataflow",
-                   halo_mode: str = "concat",
-                   precond: str | None = None,
-                   precond_params: dict | None = None) -> float:
+def iteration_breakdown(method: str, nbar: int,
+                        local_grid: tuple[int, int, int],
+                        chips: int, *, dtype_bytes: int = 8,
+                        decomposition: str = "1d", noise: str = "tpu",
+                        execution: str = "dataflow",
+                        halo_mode: str = "concat",
+                        precond: str | None = None,
+                        precond_params: dict | None = None) -> dict:
     """``execution``: "mpi" = every reduction blocks (the paper's MPI-only
     baseline); "dataflow" = reductions hide behind their overlap windows
     (what the task runtime buys in the paper / XLA buys here).
@@ -101,6 +102,11 @@ def iteration_time(method: str, nbar: int, local_grid: tuple[int, int, int],
     ``halo_hide="interior"`` and overlap is on).  This prices ONE
     iteration; the payoff — fewer iterations — is the other axis of the
     trade-off (see benchmarks/table_iterations.py for measured counts).
+
+    Returns the per-phase split ``{"t_mem", "t_halo", "t_precond",
+    "t_reduce", "total"}`` — the prediction ``repro.obs.attribution``
+    lines up against measured phase times; :func:`iteration_time` is its
+    ``total``.
     """
     r = local_grid[0] * local_grid[1] * local_grid[2]
     m = METHODS[method]
@@ -146,7 +152,15 @@ def iteration_time(method: str, nbar: int, local_grid: tuple[int, int, int],
     # the ppermutes, applied to the global reduction.
     t_red = t_reduce(m, chips, noise=noise, execution=execution,
                      t_vec=t_vec, t_spmv=t_spmv, t_pre_apply=t_pre_apply)
-    return t_mem + t_halo + t_pre + t_red
+    return {"t_mem": t_mem, "t_halo": t_halo, "t_precond": t_pre,
+            "t_reduce": t_red, "total": t_mem + t_halo + t_pre + t_red}
+
+
+def iteration_time(method: str, nbar: int, local_grid: tuple[int, int, int],
+                   chips: int, **kw) -> float:
+    """Total modelled per-iteration time — ``iteration_breakdown(...)``
+    summed (see that function for the knobs and the model)."""
+    return iteration_breakdown(method, nbar, local_grid, chips, **kw)["total"]
 
 
 def reduction_latency(chips: int, *, noise: str = "tpu") -> float:

@@ -79,6 +79,24 @@ class SolverOptions:
                   ``donate=False`` to keep reusing your own ``x0`` buffer.
                   The ``timed_*`` paths always compile an undonated variant
                   (they re-call with the same buffers).
+    telemetry:    opt-in per-iteration convergence telemetry (repro.obs):
+                  thread a bounded scalar-history buffer through the
+                  solver's while-loop carry and return it as
+                  ``SolveResult.telemetry`` — a
+                  ``(min(telemetry_buffer, maxiter+1), n_scalars)`` array
+                  whose row k holds every declared loop-carry scalar after
+                  iteration k (row 0 = the initial state; NaN-padded past
+                  convergence; iterations beyond the buffer overwrite its
+                  last row).  Works on every backend (the buffer is part of
+                  the MethodDef driver's carry) and is donation-safe
+                  (fixed-size, created inside the jitted solve).  Disabled
+                  (the default) the solve is a bitwise no-op vs the
+                  pre-telemetry facade: ``SolveResult.telemetry`` is
+                  ``None`` — an empty pytree subtree — and the lowered HLO
+                  is unchanged.  Enabled it adds one (cheap, fused)
+                  buffer write per iteration to the compiled loop.
+    telemetry_buffer: row bound of the telemetry buffer (clamped to
+                  ``maxiter + 1``); only read when ``telemetry=True``.
     """
 
     tol: float = 1e-6
@@ -94,6 +112,17 @@ class SolverOptions:
     precond: str = "none"
     precond_params: dict | None = None
     donate: bool = True
+    telemetry: bool = False
+    telemetry_buffer: int = 256
+
+    def telemetry_rows(self) -> int:
+        """Effective telemetry buffer rows: 0 when disabled, else the
+        declared bound clamped to ``maxiter + 1`` (the most rows a solve
+        can produce).  This is the ``telemetry=`` integer the MethodDef
+        driver and ``solve_shardmap`` take."""
+        if not self.telemetry:
+            return 0
+        return min(self.telemetry_buffer, self.maxiter + 1)
 
     def __post_init__(self):
         if self.precond not in precond_names():
@@ -110,6 +139,9 @@ class SolverOptions:
                 f"unknown halo_mode {self.halo_mode!r}; options: {HALO_MODES}")
         if self.maxiter < 0:
             raise ValueError(f"maxiter must be >= 0, got {self.maxiter}")
+        if self.telemetry_buffer < 1:
+            raise ValueError(
+                f"telemetry_buffer must be >= 1, got {self.telemetry_buffer}")
 
     def replace(self, **kw) -> "SolverOptions":
         return dataclasses.replace(self, **kw)

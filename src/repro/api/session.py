@@ -39,6 +39,7 @@ from repro.core.compat import shard_map
 from repro.core.distributed import DistributedOp, solve_shardmap, solve_step_shardmap
 from repro.core.problems import HPCGProblem, make_problem
 from repro.core.solvers import LocalOp, SolveResult
+from repro.obs import trace as obs
 
 
 class SolverSession:
@@ -79,12 +80,17 @@ class SolverSession:
                     f"f64={have == jnp.dtype(jnp.float64)} (the problem's "
                     f"dtype is authoritative) or rebuild the problem.")
         self.problem = problem
-        self.spec: SolverSpec = get_solver(method)
-        self.backend: Backend = backend or resolve_backend(self.options,
-                                                           mesh=mesh)
-        self._matvec = resolve_matvec(problem.stencil, self.options)
-        self.halo_mode = resolve_halo_mode(self.options)
-        self.precond = resolve_precond(self.options)
+        # solve-lifecycle spans (repro.obs): resolve -> precond.setup ->
+        # compile (in _executable) -> execute (in solve/solve_batched)
+        with obs.span("resolve", method=method, layout=self.options.layout,
+                      grid=list(problem.shape)):
+            self.spec: SolverSpec = get_solver(method)
+            self.backend: Backend = backend or resolve_backend(self.options,
+                                                               mesh=mesh)
+            self._matvec = resolve_matvec(problem.stencil, self.options)
+            self.halo_mode = resolve_halo_mode(self.options)
+        with obs.span("precond.setup", precond=self.options.precond):
+            self.precond = resolve_precond(self.options)
         if self.precond is not None and not self.spec.accepts_precond:
             from repro.api.registry import REGISTRY
             takers = sorted(n for n, s in REGISTRY.items()
@@ -129,10 +135,16 @@ class SolverSession:
                 f"{' [pallas]' if self.options.pallas else ''}{pre}")
 
     def _solver_kwargs(self, A) -> dict:
-        """tol/maxiter/norm_ref plus the bound preconditioner apply."""
+        """tol/maxiter/norm_ref plus the bound preconditioner apply (and
+        the telemetry row bound when convergence telemetry is on — only
+        passed when enabled, so a custom registry ``fn`` that predates the
+        keyword keeps working)."""
         kw = self.options.solver_kwargs()
         if self.spec.accepts_precond:
             kw["M"] = None if self.precond is None else self.precond.bind(A)
+        rows = self.options.telemetry_rows()
+        if rows:
+            kw["telemetry"] = rows
         return kw
 
     def _use_fused_body(self) -> bool:
@@ -170,7 +182,8 @@ class SolverSession:
                 def run_fused(b, x0):
                     ops = Ops(A, b, norm_ref=opts.norm_ref)
                     return run_method(mdef, ops, x0, tol=opts.tol,
-                                      maxiter=opts.maxiter, fused=True)
+                                      maxiter=opts.maxiter, fused=True,
+                                      telemetry=opts.telemetry_rows())
 
                 return jax.jit(run_fused, **jit_kw)
             # fused kernels inside the shard_map body (PallasOp wraps the
@@ -179,7 +192,7 @@ class SolverSession:
                 self.problem, self.method, self.backend.mesh,
                 dims_map=opts.dims_map, tol=opts.tol, maxiter=opts.maxiter,
                 norm_ref=opts.norm_ref, halo_mode=self.halo_mode,
-                pallas_fused=True)
+                pallas_fused=True, telemetry=opts.telemetry_rows())
             return jax.jit(fn, **jit_kw)
         if self.backend.kind == "local":
             A = LocalOp(self.problem.stencil, matvec_padded=self._matvec)
@@ -193,7 +206,8 @@ class SolverSession:
             self.problem, self.method, self.backend.mesh,
             dims_map=opts.dims_map, tol=opts.tol, maxiter=opts.maxiter,
             norm_ref=opts.norm_ref, matvec_padded=self._matvec,
-            halo_mode=self.halo_mode, precond=self.precond)
+            halo_mode=self.halo_mode, precond=self.precond,
+            telemetry=opts.telemetry_rows())
         return jax.jit(fn, **jit_kw)
 
     def _place(self, x: jax.Array, *, batched: bool = False) -> jax.Array:
@@ -214,11 +228,13 @@ class SolverSession:
             (shape, self.method, self.options.precond),
             {"hits": 0, "misses": 0, "compile_s": 0.0})
         if ent is None:
-            t0 = time.perf_counter()
-            ent = builder().lower(*example_args).compile()
-            st["misses"] += 1
-            st["compile_s"] += time.perf_counter() - t0
-            self._executables[shape] = ent
+            with obs.span("compile", method=self.method, shape=list(shape),
+                          backend=self.backend.kind):
+                t0 = time.perf_counter()
+                ent = builder().lower(*example_args).compile()
+                st["misses"] += 1
+                st["compile_s"] += time.perf_counter() - t0
+                self._executables[shape] = ent
         else:
             st["hits"] += 1
         return ent
@@ -257,11 +273,21 @@ class SolverSession:
 
     def solve(self, b: jax.Array | None = None,
               x0: jax.Array | None = None) -> SolveResult:
-        b = self.problem.b() if b is None else b
-        x0 = self.problem.x0() if x0 is None else x0
-        fn = self._executable(tuple(self.problem.shape), self._build_fn,
-                              (self._abstract(tuple(self.problem.shape)),) * 2)
-        return fn(self._place(b), self._place(x0))
+        with obs.span("solve", method=self.method,
+                      grid=list(self.problem.shape),
+                      backend=self.backend.kind):
+            b = self.problem.b() if b is None else b
+            x0 = self.problem.x0() if x0 is None else x0
+            fn = self._executable(
+                tuple(self.problem.shape), self._build_fn,
+                (self._abstract(tuple(self.problem.shape)),) * 2)
+            with obs.span("execute") as sp:
+                res = fn(self._place(b), self._place(x0))
+                if sp is not None:
+                    # only when tracing: block so the span times the solve,
+                    # not the async dispatch (result semantics unchanged)
+                    res = jax.block_until_ready(res)
+        return res
 
     def timed_solve(self, b: jax.Array | None = None,
                     x0: jax.Array | None = None, *,
@@ -270,12 +296,24 @@ class SolverSession:
         """Solve with honest wall-clock stats: warm-up (compile) happens
         outside the timed region and every call blocks until ready.  Uses
         an undonated compile (repeat calls reuse the same input buffers)."""
-        if self._timed_fn is None:
-            self._timed_fn = self._build_fn(donate=False)
-        b = self._place(self.problem.b() if b is None else b)
-        x0 = self._place(self.problem.x0() if x0 is None else x0)
-        return timed_result(self._timed_fn, b, x0, repeats=repeats,
-                            warmup=warmup)
+        with obs.span("solve", method=self.method,
+                      grid=list(self.problem.shape),
+                      backend=self.backend.kind, timed=True,
+                      repeats=repeats):
+            b = self._place(self.problem.b() if b is None else b)
+            x0 = self._place(self.problem.x0() if x0 is None else x0)
+            if self._timed_fn is None:
+                # the jit is lazy, so AOT-lower here to give the compile its
+                # own honest span (warm-up inside timed_result would
+                # otherwise absorb it invisibly)
+                with obs.span("compile", method=self.method,
+                              shape=list(self.problem.shape),
+                              backend=self.backend.kind):
+                    self._timed_fn = (self._build_fn(donate=False)
+                                      .lower(b, x0).compile())
+            with obs.span("execute"):
+                return timed_result(self._timed_fn, b, x0, repeats=repeats,
+                                    warmup=warmup)
 
     # -- batched multi-RHS path (the serving workload) ------------------------
     def _build_batched_fn(self, *, donate: bool | None = None):
@@ -305,8 +343,9 @@ class SolverSession:
             jax.vmap(local_solve),
             mesh=self.backend.mesh,
             in_specs=(bspec, bspec),
-            out_specs=SolveResult(x=bspec, iters=P(), res_norm=P(),
-                                  history=P()),
+            out_specs=SolveResult(
+                x=bspec, iters=P(), res_norm=P(), history=P(),
+                telemetry=P() if opts.telemetry_rows() else None),
         )
         return jax.jit(fn, **jit_kw)
 
@@ -328,11 +367,18 @@ class SolverSession:
         ``bs``/``x0s``: (batch, nx, ny, nz); ``x0s`` defaults to zeros.
         Returns a ``SolveResult`` whose leaves carry a leading batch axis.
         """
-        bs, x0s = self._prep_batched(bs, x0s)
-        shape = tuple(bs.shape)
-        fn = self._executable(shape, self._build_batched_fn,
-                              (self._abstract(shape, batched=True),) * 2)
-        return fn(bs, x0s)
+        with obs.span("solve", method=self.method,
+                      grid=list(self.problem.shape),
+                      backend=self.backend.kind, batch=int(bs.shape[0])):
+            bs, x0s = self._prep_batched(bs, x0s)
+            shape = tuple(bs.shape)
+            fn = self._executable(shape, self._build_batched_fn,
+                                  (self._abstract(shape, batched=True),) * 2)
+            with obs.span("execute") as sp:
+                res = fn(bs, x0s)
+                if sp is not None:
+                    res = jax.block_until_ready(res)
+        return res
 
     def timed_solve_batched(self, bs: jax.Array,
                             x0s: jax.Array | None = None, *,

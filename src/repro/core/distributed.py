@@ -317,6 +317,7 @@ def solve_shardmap(
     halo_mode: str = "auto",
     precond=None,
     pallas_fused: bool = False,
+    telemetry: int = 0,
 ):
     """Build the shard_map-wrapped distributed solver; returns (fn, in_specs).
 
@@ -329,7 +330,11 @@ def solve_shardmap(
     halo machinery.  ``pallas_fused=True`` wraps the operator in a
     ``PallasOp`` and runs the method's fused-kernel body (methods that
     declare one, e.g. ``cg_merged``) — the fused kernels execute inside
-    the shard_map body, halos and psums included.
+    the shard_map body, halos and psums included.  ``telemetry=N``
+    (repro.obs) threads the driver's bounded scalar-history buffer through
+    the loop carry; the recorded scalars are post-psum (replicated), so the
+    buffer rides an unsharded ``P()`` out_spec.  ``telemetry=0`` keeps the
+    out-spec tree (and the lowered HLO) bit-for-bit the pre-telemetry one.
     """
     mdef = _check_method(method, precond, pallas_fused, matvec_padded)
     layout = make_layout(mesh, dims_map)
@@ -340,14 +345,15 @@ def solve_shardmap(
                          halo_mode=halo_mode, precond=precond,
                          norm_ref=norm_ref, pallas_fused=pallas_fused)
         return run_method(mdef, ops, x0_loc, tol=tol, maxiter=maxiter,
-                          fused=pallas_fused)
+                          fused=pallas_fused, telemetry=telemetry)
 
     spec = layout.spec()
     fn = shard_map(
         local_solve,
         mesh=mesh,
         in_specs=(spec, spec),
-        out_specs=SolveResult(x=spec, iters=P(), res_norm=P(), history=P()),
+        out_specs=SolveResult(x=spec, iters=P(), res_norm=P(), history=P(),
+                              telemetry=P() if telemetry else None),
     )
     return fn, layout
 

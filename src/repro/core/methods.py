@@ -84,6 +84,14 @@ class SolveResult(NamedTuple):
     iters: jax.Array          # number of completed iterations
     res_norm: jax.Array       # final ||r||_2 (method's own residual estimate)
     history: jax.Array        # (maxiter+1,) residual-norm history, NaN-padded
+    #: opt-in per-iteration scalar-state telemetry (repro.obs): a bounded
+    #: (buffer, len(mdef.scalars)) NaN-padded buffer of the method's declared
+    #: loop-carry scalars, row k = the state after iteration k (row 0 = the
+    #: initial state; overflow past the buffer overwrites the last row).
+    #: ``None`` when disabled — an EMPTY pytree subtree, so the result tree,
+    #: the lowered HLO and every shard_map out_spec are bit-for-bit the
+    #: pre-telemetry ones.
+    telemetry: jax.Array | None = None
 
 
 def _default_dot(a: jax.Array, b: jax.Array) -> jax.Array:
@@ -269,7 +277,7 @@ def method_names() -> list[str]:
 
 def run_method(mdef: MethodDef, ops: Ops, x0: jax.Array, *,
                tol: float = 1e-6, maxiter: int | None = None,
-               fused: bool = False) -> SolveResult:
+               fused: bool = False, telemetry: int = 0) -> SolveResult:
     """Run ``mdef`` to convergence: ``lax.while_loop`` around its ``step``.
 
     The convergence check, the residual history and the reported
@@ -277,6 +285,15 @@ def run_method(mdef: MethodDef, ops: Ops, x0: jax.Array, *,
     every backend (local, shard_map, fused Pallas) stops on identical
     criteria.  ``fused=True`` selects the fused-kernel body (``ops.A`` must
     then be a ``PallasOp``).
+
+    ``telemetry=N`` (repro.obs) additionally threads a bounded
+    ``(min(N, maxiter+1), len(mdef.scalars))`` scalar-history buffer
+    through the while-loop carry: row k holds every declared loop-carry
+    scalar after iteration k (row 0 = the initial state; iterations past
+    the buffer overwrite its last row — fixed-size, so the carry stays
+    donation-safe).  ``telemetry=0`` (the default) takes a code path
+    byte-identical to the pre-telemetry driver and returns
+    ``SolveResult.telemetry = None``.
     """
     if maxiter is None:
         maxiter = mdef.default_maxiter
@@ -289,20 +306,47 @@ def run_method(mdef: MethodDef, ops: Ops, x0: jax.Array, *,
     state = tuple(init(ops, x0))
     hist = _hist_init(maxiter, jnp.sqrt(state[ridx]), ops.b.dtype)
 
+    if not telemetry:
+        def cond(c):
+            state, k, _ = c
+            return (state[ridx] >= thresh2) & (k < maxiter)
+
+        def body(c):
+            state, k, hist = c
+            state = tuple(step(ops, state))
+            hist = hist.at[k + 1].set(jnp.sqrt(state[ridx]).astype(hist.dtype))
+            return (state, k + 1, hist)
+
+        state, k, hist = lax.while_loop(cond, body, (state, 0, hist))
+        x = mdef.finalize(ops, x0, state) if mdef.finalize else state[0]
+        return SolveResult(x=x, iters=k, res_norm=jnp.sqrt(state[ridx]),
+                           history=hist)
+
+    cap = min(int(telemetry), maxiter + 1)
+    nvec = len(mdef.vectors)
+    dt = hist.dtype
+
+    def _scal_row(state):
+        return jnp.stack([jnp.asarray(s).astype(dt) for s in state[nvec:]])
+
+    tele = jnp.full((cap, len(mdef.scalars)), jnp.nan, dt)
+    tele = tele.at[0].set(_scal_row(state))
+
     def cond(c):
-        state, k, _ = c
+        state, k, _, _ = c
         return (state[ridx] >= thresh2) & (k < maxiter)
 
     def body(c):
-        state, k, hist = c
+        state, k, hist, tele = c
         state = tuple(step(ops, state))
         hist = hist.at[k + 1].set(jnp.sqrt(state[ridx]).astype(hist.dtype))
-        return (state, k + 1, hist)
+        tele = tele.at[jnp.minimum(k + 1, cap - 1)].set(_scal_row(state))
+        return (state, k + 1, hist, tele)
 
-    state, k, hist = lax.while_loop(cond, body, (state, 0, hist))
+    state, k, hist, tele = lax.while_loop(cond, body, (state, 0, hist, tele))
     x = mdef.finalize(ops, x0, state) if mdef.finalize else state[0]
     return SolveResult(x=x, iters=k, res_norm=jnp.sqrt(state[ridx]),
-                       history=hist)
+                       history=hist, telemetry=tele)
 
 
 # =============================================================================

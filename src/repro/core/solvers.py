@@ -95,7 +95,7 @@ def make_solver(name: str) -> Callable:
     mdef = get_method(name)
 
     def solver(A, b, x0, *, tol=1e-6, maxiter=None, dot=None, norm_ref=None,
-               M=None, **params) -> SolveResult:
+               M=None, telemetry=0, **params) -> SolveResult:
         if M is not None and not mdef.accepts_precond:
             raise TypeError(f"{name!r} takes no preconditioner (M=)")
         unknown = set(params) - set(mdef.params)
@@ -105,7 +105,8 @@ def make_solver(name: str) -> Callable:
                 f"{sorted(unknown)}; this method accepts "
                 f"{sorted(mdef.params) or 'no extra parameters'}")
         ops = Ops(A, b, M=M, dot=dot, norm_ref=norm_ref, params=params)
-        return run_method(mdef, ops, x0, tol=tol, maxiter=maxiter)
+        return run_method(mdef, ops, x0, tol=tol, maxiter=maxiter,
+                          telemetry=telemetry)
 
     solver.__name__ = name
     solver.__qualname__ = name

@@ -113,9 +113,12 @@ def _lm_main(args) -> dict:
 def _solver_main(args) -> dict:
     from repro.core.problems import enable_f64
     from repro.runtime.monitor import FailureInjector
-    from repro.serve import (ServeConfig, SolverService, generate_trace,
-                             replay)
+    from repro.serve import (MIXED_BUCKETS, SMOKE_BUCKETS, ServeConfig,
+                             SolverService, generate_trace, replay)
 
+    if args.trace:
+        from repro.obs import trace as obs
+        obs.enable(args.trace)   # equivalent: REPRO_TRACE=PATH
     enable_f64()   # the reference trace solves in the paper's f64
     cfg = ServeConfig(max_batch=args.max_batch,
                       cache_capacity=args.cache_capacity,
@@ -128,7 +131,8 @@ def _solver_main(args) -> dict:
     if recovered:
         print(f"[serve] recovered {len(recovered)} orphaned request(s) "
               f"from {cfg.recovery_dir}")
-    trace = generate_trace(seed=args.seed, scale=args.scale)
+    buckets = SMOKE_BUCKETS if args.buckets == "smoke" else MIXED_BUCKETS
+    trace = generate_trace(buckets, seed=args.seed, scale=args.scale)
     results = replay(service, trace)
     service.close()
     snap = service.snapshot()
@@ -169,6 +173,13 @@ def main(argv=None) -> dict:
     # -- solver mode -----------------------------------------------------------
     ap.add_argument("--scale", type=int, default=1,
                     help="(solver) trace size multiplier per bucket")
+    ap.add_argument("--buckets", choices=("mixed", "smoke"), default="mixed",
+                    help="(solver) reference mix to replay: mixed = the "
+                         "acceptance trace, smoke = the tiny CI workload")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="(solver) append repro.obs/v1 records (serve "
+                         "lifecycle spans + SLO events) to PATH; equivalent "
+                         "to REPRO_TRACE=PATH")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--max-batch", type=int, default=4,
                     help="(solver) padded in-flight batch size per bucket")

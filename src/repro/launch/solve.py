@@ -56,7 +56,21 @@ def main(argv=None) -> dict:
                          "compiled call (the serving path)")
     ap.add_argument("--repeats", type=int, default=1,
                     help="timed repetitions after the warm-up/compile call")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="append repro.obs/v1 trace records (solve lifecycle "
+                         "spans) to PATH; equivalent to REPRO_TRACE=PATH")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="carry the per-iteration scalar history through the "
+                         "solve (SolverOptions.telemetry) and report the "
+                         "convergence curve; off = bitwise-identical solve")
+    ap.add_argument("--telemetry-buffer", type=int, default=None,
+                    help="telemetry row cap (default "
+                         "SolverOptions.telemetry_buffer)")
     args = ap.parse_args(argv)
+
+    if args.trace:
+        from repro.obs import trace as obs
+        obs.enable(args.trace)
 
     cfg = SOLVER_CONFIGS[args.config] if args.config else None
     method = args.method or (cfg.method if cfg else "cg_nb")
@@ -66,6 +80,10 @@ def main(argv=None) -> dict:
         # facade refuses to flip it implicitly (see SolverOptions.f64)
         enable_f64()
     overrides = dict(f64=args.f64, layout=args.layout, pallas=args.pallas)
+    if args.telemetry:
+        overrides["telemetry"] = True
+    if args.telemetry_buffer is not None:
+        overrides["telemetry_buffer"] = args.telemetry_buffer
     if args.precond is not None:
         overrides["precond"] = args.precond
     if args.tol is not None:
@@ -89,6 +107,11 @@ def main(argv=None) -> dict:
            "precond": sess.options.precond,
            "iters": int(res.iters), "res_norm": float(res.res_norm),
            "err": err, "wall_s": dt, "backend": sess.backend.describe()}
+    if args.telemetry:
+        from repro.obs.convergence import curve_record
+        out["convergence"] = curve_record(res, method, scalars=True)
+        print(f"[solve] telemetry: {out['convergence']['telemetry_rows']} "
+              f"rows, scalars={sorted(out['convergence']['scalars'])}")
 
     if args.batch:
         import numpy as np

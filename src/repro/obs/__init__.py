@@ -1,0 +1,28 @@
+# Unified observability (docs/API.md §Observability): structured spans/
+# events on one JSONL schema, per-iteration convergence telemetry, and
+# predicted-vs-measured cost attribution.  Only the zero-dependency trace
+# surface is imported eagerly (span() must stay near-free when disabled);
+# the telemetry/attribution helpers import jax and live in
+# ``repro.obs.convergence`` / ``repro.obs.attribution``.
+from repro.obs.trace import (SCHEMA, Tracer, active, current, disable,
+                             emit, enable, event, make_event, make_metric,
+                             read_trace, span, summarize, validate_record,
+                             validate_stream)
+
+__all__ = [
+    "SCHEMA",
+    "Tracer",
+    "active",
+    "current",
+    "disable",
+    "emit",
+    "enable",
+    "event",
+    "make_event",
+    "make_metric",
+    "read_trace",
+    "span",
+    "summarize",
+    "validate_record",
+    "validate_stream",
+]

@@ -1,0 +1,98 @@
+"""Per-iteration convergence telemetry — the host-side half.
+
+The device-side half lives in the MethodDef driver
+(``repro.core.methods.run_method(..., telemetry=N)``): an opt-in, bounded
+``(rows, n_scalars)`` buffer of every declared loop-carry scalar, threaded
+through the ``lax.while_loop`` carry so it works identically on the local,
+shard_map and fused-Pallas backends.  This module turns that raw buffer
+(and the always-present residual ``history``) into things a human or a
+JSON consumer can use: named per-scalar curves, trimmed residual curves,
+and the offline true-residual recompute the tests gate the telemetry
+against.
+
+Enabled via ``SolverOptions(telemetry=True[, telemetry_buffer=N])``;
+``launch/solve.py --telemetry`` surfaces the curves in its ``--json``
+record.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def _get_method(method: str):
+    from repro.core.methods import get_method
+    return get_method(method)
+
+
+def effective_rows(result) -> int:
+    """Rows of ``result.telemetry`` actually written: ``iters + 1`` clamped
+    to the buffer bound (iterations past the buffer overwrote its last
+    row)."""
+    if result.telemetry is None:
+        raise ValueError("result carries no telemetry "
+                         "(SolverOptions.telemetry was off)")
+    cap = int(np.asarray(result.telemetry).shape[-2])
+    return min(int(result.iters) + 1, cap)
+
+
+def scalar_history(result, method: str) -> dict[str, np.ndarray]:
+    """``{scalar name: per-iteration values}`` from a telemetry-carrying
+    ``SolveResult``, keyed by the method's declared scalar slots and
+    trimmed to the rows actually written (row 0 = the initial state)."""
+    mdef = _get_method(method)
+    rows = effective_rows(result)
+    tele = np.asarray(result.telemetry)[..., :rows, :]
+    return {name: tele[..., i] for i, name in enumerate(mdef.scalars)}
+
+
+def residual_curve(result) -> np.ndarray:
+    """The per-iteration residual-norm curve, trimmed to ``iters + 1``
+    entries (the NaN padding past convergence dropped).  Reads the
+    driver's ``history`` — present on every solve, telemetry or not."""
+    hist = np.asarray(result.history)
+    return hist[..., : int(np.asarray(result.iters).max()) + 1]
+
+
+def telemetry_residuals(result, method: str) -> np.ndarray:
+    """The residual curve as recorded in the telemetry buffer: sqrt of the
+    method's declared ``res_scalar`` column.  Equals
+    :func:`residual_curve` over the buffered rows — asserted by
+    tests/test_obs.py for every registry method on both backends."""
+    mdef = _get_method(method)
+    rows = effective_rows(result)
+    tele = np.asarray(result.telemetry)
+    return np.sqrt(tele[..., :rows, mdef.res_index - len(mdef.vectors)])
+
+
+def true_residual_norm(A, b, x) -> float:
+    """``||b - A x||_2`` recomputed offline against the operator itself —
+    the ground truth the recurrence-carried curves are validated against
+    (they drift from it by O(eps * kappa) per iteration; see the
+    repro.core.methods module docstring)."""
+    import jax.numpy as jnp
+    r = jnp.asarray(b) - A.matvec(jnp.asarray(x))
+    return float(jnp.sqrt(jnp.vdot(r, r)))
+
+
+def curve_record(result, method: str, *, scalars: bool = False) -> dict:
+    """A JSON-able telemetry record for one solve — what
+    ``launch/solve.py --telemetry --json`` embeds.
+
+    Always: ``iters`` and the trimmed ``residuals`` curve.  When the
+    result carries a telemetry buffer: ``telemetry_rows`` (buffer rows
+    written) and, with ``scalars=True``, every named scalar curve.
+    """
+    out = {
+        "iters": int(np.asarray(result.iters).max()),
+        "residuals": [float(v) for v in np.atleast_1d(
+            np.asarray(residual_curve(result)).squeeze())],
+    }
+    if result.telemetry is not None:
+        out["telemetry_rows"] = effective_rows(result)
+        if scalars:
+            out["scalars"] = {
+                name: [float(v) for v in np.atleast_1d(vals.squeeze())]
+                for name, vals in scalar_history(result, method).items()
+            }
+    return out

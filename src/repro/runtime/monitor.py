@@ -63,11 +63,34 @@ class Heartbeat:
 
 def write_host_heartbeat(directory: str, host_id: int, step: int,
                          step_time: float) -> None:
+    """One per-host heartbeat record.  Written as a ``repro.obs/v1``
+    *metric* record (``name="heartbeat"``, step/step_time in ``attrs``) —
+    the same schema the serve metrics and every trace span use, replacing
+    the bespoke ``{host, step, t, step_time}`` shape that was incompatible
+    with ``serve/metrics.py``'s records.  Also forwarded to the active
+    trace when one is enabled."""
+    from repro.obs import trace as obs
+
     os.makedirs(directory, exist_ok=True)
+    rec = obs.make_metric("heartbeat", host=host_id, step=step,
+                          step_time=step_time)
+    obs.emit(rec)
     path = os.path.join(directory, f"host_{host_id}.json")
     with open(path, "w") as f:
-        json.dump({"host": host_id, "step": step, "t": time.time(),
-                   "step_time": step_time}, f)
+        json.dump(rec, f)
+
+
+def _read_heartbeat(path: str) -> dict:
+    """``{host, step, t, step_time}`` from a heartbeat file — new schema
+    or the pre-PR-8 flat shape (the back-compat reader the unification
+    keeps old monitor directories scannable with)."""
+    with open(path) as f:
+        rec = json.load(f)
+    if rec.get("schema", "").startswith("repro.obs/"):
+        a = rec["attrs"]
+        return {"host": rec["host"], "step": a["step"], "t": rec["t_wall"],
+                "step_time": a.get("step_time")}
+    return rec
 
 
 def scan_hosts(directory: str, timeout_s: float = 60.0) -> dict:
@@ -79,8 +102,7 @@ def scan_hosts(directory: str, timeout_s: float = 60.0) -> dict:
     for fn in os.listdir(directory):
         if not fn.startswith("host_"):
             continue
-        with open(os.path.join(directory, fn)) as f:
-            rec = json.load(f)
+        rec = _read_heartbeat(os.path.join(directory, fn))
         (alive if now - rec["t"] < timeout_s else dead).append(rec["host"])
         steps[rec["host"]] = rec["step"]
     return {

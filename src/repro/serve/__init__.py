@@ -6,7 +6,8 @@ from repro.serve.metrics import PERCENTILES, ServeMetrics, scan_metrics
 from repro.serve.queue import (BucketKey, DTYPES, QueueFull, Request,
                                RequestQueue)
 from repro.serve.service import ServeConfig, ServeResult, SolverService
-from repro.serve.trace import MIXED_BUCKETS, TraceBucket, generate_trace, replay
+from repro.serve.trace import (MIXED_BUCKETS, SMOKE_BUCKETS, TraceBucket,
+                               generate_trace, replay)
 
 __all__ = [
     "BucketKey",
@@ -14,6 +15,7 @@ __all__ = [
     "DTYPES",
     "ExecutableCache",
     "MIXED_BUCKETS",
+    "SMOKE_BUCKETS",
     "PERCENTILES",
     "QueueFull",
     "Request",

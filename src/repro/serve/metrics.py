@@ -7,12 +7,23 @@ enough to trigger + solve time.  Sustained QPS is completions over the
 span from first admission to last completion — the number a capacity
 plan can use, not a burst peak.
 
-``snapshot()`` returns one plain-dict record and ``write()`` persists it
-as a JSON file, the same host-side record style as
-``runtime/monitor.py``'s per-host heartbeats (a directory of small JSON
-files a coordinator can scan) — ``scan_metrics`` is the coordinator-side
-reader.  ``benchmarks/bench_serve.py`` embeds the same record into
-``BENCH_serve.json`` for the CI gate.
+Since PR 8 the store is not bespoke: every ``record_*`` call builds one
+``repro.obs/v1`` *event* record (``serve.admit`` / ``serve.complete`` /
+``serve.queue_depth`` / ``serve.preempt``), keeps it in memory, and
+forwards it to the active trace (``repro.obs``) when one is enabled —
+so a ``--trace`` run of the service and the numbers it prints come from
+the same stream.  The counters and percentiles below are *views* over
+those events (``repro.obs.trace.summarize`` uses the same percentile
+helper); ``snapshot()`` keeps its pre-PR-8 key set (bench_serve and the
+CI gate parse it) plus a ``schema`` tag.
+
+``write()`` persists a snapshot as ``metrics_<name>.json`` — the same
+host-side record style as ``runtime/monitor.py``'s per-host heartbeats —
+and ``scan_metrics`` is the coordinator-side reader.  Both readers accept
+the pre-PR-8 untagged records (``load_record`` is the back-compat shim);
+``benchmarks/bench_serve.py`` embeds the same snapshot into
+``BENCH_serve.json`` for the CI gate, and PR-6-era files still parse
+(tests/test_obs.py regression-tests the committed one).
 """
 
 from __future__ import annotations
@@ -23,42 +34,75 @@ import time
 
 import numpy as np
 
+from repro.obs import trace as obs
+
 #: the SLO percentiles every snapshot reports
 PERCENTILES = (50, 95, 99)
 
 
+def load_record(rec: dict) -> dict:
+    """Back-compat reader: normalise a metrics/heartbeat record written
+    before the unified schema (no ``schema`` key) into the tagged shape.
+    Already-tagged records pass through unchanged."""
+    if "schema" in rec:
+        return rec
+    out = dict(rec)
+    out["schema"] = f"{obs.SCHEMA}+legacy"
+    if "t_wall" not in out and "t" in out:
+        out["t_wall"] = out["t"]
+    return out
+
+
 class ServeMetrics:
     def __init__(self):
-        self._latencies: list[float] = []
-        self._by_bucket: dict[str, list[float]] = {}
-        self._depth_samples: list[int] = []
-        self.completed = 0
-        self.preemptions = 0
-        self.requeued = 0
+        self._events: list[dict] = []     # repro.obs/v1 event records
         self.rejected = 0
         self._t_first_submit: float | None = None
         self._t_last_done: float | None = None
 
-    # -- recording ------------------------------------------------------------
-    def record_submit(self, now: float) -> None:
+    # -- recording (each call = one schema event, forwarded to the trace) -----
+    def _record(self, name: str, **attrs) -> None:
+        rec = obs.make_event(name, **attrs)
+        self._events.append(rec)
+        obs.emit(rec)
+
+    def record_submit(self, now: float, *, bucket: str | None = None,
+                      rid: int | None = None) -> None:
         if self._t_first_submit is None:
             self._t_first_submit = now
+        self._record("serve.admit", bucket=bucket, id=rid)
 
     def record_completion(self, bucket: str, latency_s: float,
                           now: float) -> None:
-        self._latencies.append(latency_s)
-        self._by_bucket.setdefault(bucket, []).append(latency_s)
-        self.completed += 1
         self._t_last_done = now
+        self._record("serve.complete", bucket=bucket, latency_s=latency_s)
 
     def record_queue_depth(self, depth: int) -> None:
-        self._depth_samples.append(depth)
+        self._record("serve.queue_depth", depth=depth)
 
     def record_preemption(self, n_requeued: int) -> None:
-        self.preemptions += 1
-        self.requeued += n_requeued
+        self._record("serve.preempt", requeued=n_requeued)
 
-    # -- reading --------------------------------------------------------------
+    # -- views over the event stream ------------------------------------------
+    def events(self) -> list[dict]:
+        """The raw schema-tagged event records (what a trace would hold)."""
+        return list(self._events)
+
+    def _named(self, name: str) -> list[dict]:
+        return [e for e in self._events if e["name"] == name]
+
+    @property
+    def completed(self) -> int:
+        return len(self._named("serve.complete"))
+
+    @property
+    def preemptions(self) -> int:
+        return len(self._named("serve.preempt"))
+
+    @property
+    def requeued(self) -> int:
+        return sum(e["attrs"]["requeued"] for e in self._named("serve.preempt"))
+
     @staticmethod
     def _pcts(lats: list[float]) -> dict[str, float]:
         if not lats:
@@ -75,7 +119,14 @@ class ServeMetrics:
 
     def snapshot(self, *, cache_stats: dict | None = None,
                  queue_depth: int | None = None) -> dict:
+        lats = [e["attrs"]["latency_s"] for e in self._named("serve.complete")]
+        by_bucket: dict[str, list[float]] = {}
+        for e in self._named("serve.complete"):
+            by_bucket.setdefault(e["attrs"]["bucket"], []).append(
+                e["attrs"]["latency_s"])
+        depths = [e["attrs"]["depth"] for e in self._named("serve.queue_depth")]
         rec = {
+            "schema": obs.SCHEMA,
             "t": time.time(),
             "completed": self.completed,
             "preemptions": self.preemptions,
@@ -83,12 +134,11 @@ class ServeMetrics:
             "rejected": self.rejected,
             "qps": self.qps(),
             "queue_depth": queue_depth,
-            "queue_depth_max": (max(self._depth_samples)
-                                if self._depth_samples else 0),
-            **self._pcts(self._latencies),
+            "queue_depth_max": max(depths) if depths else 0,
+            **self._pcts(lats),
             "per_bucket": {
                 b: {"served": len(ls), **self._pcts(ls)}
-                for b, ls in sorted(self._by_bucket.items())
+                for b, ls in sorted(by_bucket.items())
             },
         }
         if cache_stats is not None:
@@ -107,12 +157,14 @@ class ServeMetrics:
 
 
 def scan_metrics(directory: str) -> dict[str, dict]:
-    """Coordinator-side reader for ``ServeMetrics.write`` records."""
+    """Coordinator-side reader for ``ServeMetrics.write`` records; accepts
+    pre-schema (untagged) files via :func:`load_record`."""
     out = {}
     if not os.path.isdir(directory):
         return out
     for fn in sorted(os.listdir(directory)):
         if fn.startswith("metrics_") and fn.endswith(".json"):
             with open(os.path.join(directory, fn)) as f:
-                out[fn[len("metrics_"):-len(".json")]] = json.load(f)
+                out[fn[len("metrics_"):-len(".json")]] = load_record(
+                    json.load(f))
     return out

@@ -48,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import trace as obs
 from repro.runtime import checkpoint as ckpt
 from repro.runtime.elastic import reshard_array
 from repro.runtime.monitor import FailureInjector, SimulatedFailure
@@ -107,7 +108,9 @@ class SolverService:
         except Exception:
             self.metrics.rejected += 1
             raise
-        self.metrics.record_submit(now)
+        # serve lifecycle events (repro.obs): admit -> queue_wait ->
+        # compile -> dispatch -> complete, all on the one schema
+        self.metrics.record_submit(now, bucket=req.key().short(), rid=rid)
         self.metrics.record_queue_depth(self.queue.depth())
         return rid
 
@@ -151,8 +154,12 @@ class SolverService:
 
     # -- compile-then-admit ---------------------------------------------------
     def _build_entry(self, key: BucketKey) -> CacheEntry:
-        session = session_for(key, pallas=self.config.pallas)
-        session.compile_batched(self.config.max_batch)
+        # runs on the compile pool's thread: the span starts its own root
+        # there (per-thread parent tracking), labelled by bucket
+        with obs.span("serve.compile", bucket=key.short(),
+                      batch=self.config.max_batch):
+            session = session_for(key, pallas=self.config.pallas)
+            session.compile_batched(self.config.max_batch)
         return CacheEntry(key, session, self.config.max_batch)
 
     def _start_compile(self, key: BucketKey) -> None:
@@ -177,35 +184,42 @@ class SolverService:
     def _dispatch(self, key: BucketKey) -> None:
         entry = self.cache.lookup(key)
         assert entry is not None, key
-        reqs = self.queue.next_batch(key, entry.batch)
-        self.metrics.record_queue_depth(self.queue.depth())
-        session = entry.session
-        dtype = np.dtype(session.problem.dtype)
-        bs = np.zeros((entry.batch, *key.grid), dtype)
-        for i, r in enumerate(reqs):
-            bs[i] = np.asarray(r.b, dtype)
-        seq = self._seq
-        self._seq += 1
-        self._wal_write(seq, key, reqs, bs)
-        try:
-            res = session.solve_batched(jnp.asarray(bs))
-            # "mid-solve": the dispatch is in flight (JAX dispatch is
-            # async); a preemption here loses the computed results
-            if self.injector is not None:
-                self.injector.maybe_fail(seq)
-            res = jax.block_until_ready(res)
-        except SimulatedFailure:
-            self._recover_inflight(seq, key, reqs)
-            self.metrics.record_preemption(len(reqs))
-            return
-        now = time.monotonic()
-        for i, r in enumerate(reqs):
-            self._results[r.id] = ServeResult(
-                id=r.id, bucket=key.short(), x=np.asarray(res.x[i]),
-                iters=int(res.iters[i]), res_norm=float(res.res_norm[i]),
-                latency_s=now - r.t_submit, requeues=r.requeues)
-            self.metrics.record_completion(key.short(), now - r.t_submit, now)
-        self._wal_clear(seq)
+        with obs.span("serve.dispatch", bucket=key.short(),
+                      batch=entry.batch):
+            reqs = self.queue.next_batch(key, entry.batch)
+            t_disp = time.monotonic()
+            for r in reqs:
+                obs.event("serve.queue_wait", id=r.id, bucket=key.short(),
+                          wait_s=t_disp - r.t_submit)
+            self.metrics.record_queue_depth(self.queue.depth())
+            session = entry.session
+            dtype = np.dtype(session.problem.dtype)
+            bs = np.zeros((entry.batch, *key.grid), dtype)
+            for i, r in enumerate(reqs):
+                bs[i] = np.asarray(r.b, dtype)
+            seq = self._seq
+            self._seq += 1
+            self._wal_write(seq, key, reqs, bs)
+            try:
+                res = session.solve_batched(jnp.asarray(bs))
+                # "mid-solve": the dispatch is in flight (JAX dispatch is
+                # async); a preemption here loses the computed results
+                if self.injector is not None:
+                    self.injector.maybe_fail(seq)
+                res = jax.block_until_ready(res)
+            except SimulatedFailure:
+                self._recover_inflight(seq, key, reqs)
+                self.metrics.record_preemption(len(reqs))
+                return
+            now = time.monotonic()
+            for i, r in enumerate(reqs):
+                self._results[r.id] = ServeResult(
+                    id=r.id, bucket=key.short(), x=np.asarray(res.x[i]),
+                    iters=int(res.iters[i]), res_norm=float(res.res_norm[i]),
+                    latency_s=now - r.t_submit, requeues=r.requeues)
+                self.metrics.record_completion(key.short(), now - r.t_submit,
+                                               now)
+            self._wal_clear(seq)
 
     # -- the write-ahead journal ----------------------------------------------
     def _wal_meta_path(self, seq: int) -> str:

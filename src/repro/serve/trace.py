@@ -51,6 +51,21 @@ MIXED_BUCKETS = (
                 precond="jacobi", precond_params=(("sweeps", 2),)),
 )
 
+#: the same mix shrunk for CI: tiny grids, modest counts — shared by
+#: ``benchmarks/bench_serve.py --smoke``, ``launch/serve.py --buckets
+#: smoke`` and ``make obs-smoke`` so every gate replays one workload
+SMOKE_BUCKETS = (
+    TraceBucket(grid=(8, 8, 8), method="cg", stencil="27pt", count=6,
+                maxiter=200),
+    TraceBucket(grid=(12, 12, 12), method="cg", stencil="7pt", count=6,
+                maxiter=200),
+    TraceBucket(grid=(8, 8, 8), method="bicgstab_b1", stencil="27pt",
+                count=6, maxiter=200),
+    TraceBucket(grid=(12, 12, 12), method="pcg", stencil="27pt",
+                precond="jacobi", precond_params=(("sweeps", 2),),
+                count=6, maxiter=200),
+)
+
 
 def generate_trace(buckets=MIXED_BUCKETS, *, seed: int = 0,
                    scale: int = 1) -> list[Request]:
