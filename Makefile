@@ -5,8 +5,8 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast verify smoke serve-smoke obs-smoke bench \
-	bench-kernels bench-precond examples lint audit audit-write
+.PHONY: test test-fast verify smoke serve-smoke obs-smoke chaos-smoke \
+	bench bench-kernels bench-precond examples lint audit audit-write
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -68,6 +68,16 @@ obs-smoke:
 	$(PYTHON) -m repro.launch.serve --mode solver --buckets smoke \
 	    --trace TRACE_obs.jsonl --json
 	$(PYTHON) -m repro.obs summarize --check TRACE_obs.jsonl
+
+# fault-injection smoke (CI gate): the seeded chaos suite — every fault
+# class (NaN poison, compile failure, preemption, deadline, quarantine)
+# against real solves and a real service, traced to TRACE_chaos.jsonl —
+# then the chaos serving bench (broken bucket -> typed rejects, retry
+# absorbs the preemption) with its own record gate
+chaos-smoke:
+	$(PYTHON) -m repro.resilience --smoke --out TRACE_chaos.jsonl
+	$(PYTHON) -m benchmarks.bench_serve --chaos
+	$(PYTHON) -m benchmarks.bench_serve --check-chaos BENCH_serve_chaos.json
 
 examples:
 	$(PYTHON) examples/quickstart.py

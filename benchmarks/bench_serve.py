@@ -16,10 +16,20 @@ asserts:
     SLO gate on the fixed CPU trace (loose bounds: CI containers are
     noisy; a 10x regression still fails loudly).
 
+``--chaos`` replays the smoke workload under injected faults (one
+preemption absorbed by the in-place retry, one bucket whose compile
+fails and must turn into typed rejects) and writes a SEPARATE record,
+``BENCH_serve_chaos.json``, with its own gate (``check_chaos_record``):
+every request accounted for (completed + rejected == submitted), the
+broken bucket fully rejected with reason ``compile_failed``, and the
+preemption retried rather than requeued.  The clean-run record and its
+``compiles_per_bucket == 1`` invariant are never polluted by chaos.
+
 Usage::
 
     PYTHONPATH=src python -m benchmarks.bench_serve            # full
     PYTHONPATH=src python -m benchmarks.bench_serve --smoke    # CI gate
+    PYTHONPATH=src python -m benchmarks.bench_serve --chaos    # chaos gate
     PYTHONPATH=src python -m benchmarks.bench_serve --check BENCH_serve.json
 """
 
@@ -76,10 +86,51 @@ def check_record(path: str) -> dict:
     return record
 
 
+def check_chaos_record(path: str) -> dict:
+    """The chaos-run gate: every submitted request accounted for, the
+    injected compile failure converted to typed rejects (exactly the
+    broken bucket's traffic), and the injected preemption absorbed by the
+    in-place retry instead of a WAL requeue."""
+    with open(path) as f:
+        record = json.load(f)
+    m = record["metrics"]
+    problems = []
+    if record["completed"] + record["rejected"] != record["requests"]:
+        problems.append(
+            f"{record['requests']} submitted but only "
+            f"{record['completed']} completed + {record['rejected']} "
+            f"rejected — requests stranded")
+    want_cf = record["meta"]["expect_compile_fail_rejects"]
+    got_cf = record["rejects_by_reason"].get("compile_failed", 0)
+    if got_cf != want_cf:
+        problems.append(f"compile_failed rejects {got_cf} != "
+                        f"expected {want_cf} (the broken bucket's traffic)")
+    if m["retries"] < 1:
+        problems.append("injected preemption never hit the retry path")
+    if m["preemptions"] != 0:
+        problems.append(f"{m['preemptions']} preemption(s) fell through "
+                        f"to the WAL requeue despite the retry budget")
+    if problems:
+        raise SystemExit(f"[bench_serve --chaos] {path}: "
+                         + "; ".join(problems))
+    print(f"[bench_serve --chaos] {path}: {record['requests']} requests -> "
+          f"{record['completed']} completed, {record['rejected']} typed "
+          f"rejects ({record['rejects_by_reason']}), "
+          f"{m['retries']} retry(ies), 0 stranded")
+    return record
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny grids + small counts (the CI gate)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="smoke workload under injected faults (one "
+                         "preemption + one compile failure); writes "
+                         "BENCH_serve_chaos.json with its own gate")
+    ap.add_argument("--check-chaos", metavar="JSON",
+                    help="assert an existing BENCH_serve_chaos.json still "
+                         "meets the chaos gate")
     ap.add_argument("--check", metavar="JSON",
                     help="don't bench: assert an existing BENCH_serve.json "
                          "still meets its recorded SLO bounds")
@@ -91,20 +142,43 @@ def main(argv=None) -> dict:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--qps-floor", type=float, default=None)
     ap.add_argument("--p99-ceiling", type=float, default=None)
-    ap.add_argument("--out", default=os.path.join(ROOT, "BENCH_serve.json"))
+    ap.add_argument("--out", default=None,
+                    help="record path (default BENCH_serve.json, or "
+                         "BENCH_serve_chaos.json under --chaos)")
     args = ap.parse_args(argv)
+    args.out = args.out or os.path.join(
+        ROOT, "BENCH_serve_chaos.json" if args.chaos else "BENCH_serve.json")
 
     if args.check:
         return check_record(args.check)
+    if args.check_chaos:
+        return check_chaos_record(args.check_chaos)
 
     enable_f64()
-    buckets = SMOKE_BUCKETS if args.smoke else None
-    scale = args.scale or (1 if args.smoke else 4)
+    smoke = args.smoke or args.chaos
+    buckets = SMOKE_BUCKETS if smoke else None
+    scale = args.scale or (1 if smoke else 4)
     trace = (generate_trace(buckets, seed=args.seed, scale=scale)
              if buckets else generate_trace(seed=args.seed, scale=scale))
-    cfg = ServeConfig(max_batch=args.max_batch,
-                      cache_capacity=args.cache_capacity)
-    service = SolverService(cfg)
+    injector = None
+    expect_cf = 0
+    if args.chaos:
+        from repro.resilience import ChaosInjector, ChaosPlan
+        # one bucket that will never compile + one preemption the retry
+        # budget must absorb; both seeded, so the record is reproducible
+        broken = "bicgstab_b1"
+        expect_cf = sum(1 for r in trace if r.method == broken)
+        injector = ChaosInjector(ChaosPlan(
+            seed=args.seed, fail_compile_buckets=(broken,),
+            preempt_at=(0,)))
+        cfg = ServeConfig(max_batch=args.max_batch,
+                          cache_capacity=args.cache_capacity,
+                          guards=True, max_retries=2,
+                          retry_backoff_s=0.01, retry_seed=args.seed)
+    else:
+        cfg = ServeConfig(max_batch=args.max_batch,
+                          cache_capacity=args.cache_capacity)
+    service = SolverService(cfg, injector=injector)
     results = replay(service, trace)
     service.close()
     snap = service.snapshot()
@@ -114,7 +188,9 @@ def main(argv=None) -> dict:
     record = {
         "meta": {
             "backend": jax.default_backend(),
-            "smoke": bool(args.smoke),
+            "smoke": bool(smoke),
+            "chaos": bool(args.chaos),
+            "expect_compile_fail_rejects": expect_cf,
             "seed": args.seed,
             "scale": scale,
             "max_batch": cfg.max_batch,
@@ -124,14 +200,17 @@ def main(argv=None) -> dict:
         },
         "requests": len(trace),
         "completed": len(results),
-        "dropped": len(trace) - len(results),
+        "rejected": len(service.rejects()),
+        "rejects_by_reason": snap["rejects_by_reason"],
+        "dropped": len(trace) - len(results) - len(service.rejects()),
         "compiles_per_bucket": compiles,
         "compile_s_per_bucket": {
             b: st["compile_s"]
             for b, st in snap["cache"]["per_bucket"].items()},
         "metrics": {k: snap[k] for k in
                     ("qps", "p50_s", "p95_s", "p99_s", "queue_depth_max",
-                     "preemptions", "requeued", "completed")},
+                     "preemptions", "requeued", "retries", "device_losses",
+                     "completed")},
         "per_bucket": snap["per_bucket"],
     }
     for b, st in snap["per_bucket"].items():
@@ -145,12 +224,15 @@ def main(argv=None) -> dict:
     print(f"[bench_serve] wrote {args.out}")
     hist = os.path.splitext(args.out)[0] + "_history.jsonl"
     trajectory_append(hist, trajectory_row(
-        "serve", smoke=bool(args.smoke), scale=scale,
+        "serve", smoke=bool(smoke), chaos=bool(args.chaos), scale=scale,
         requests=len(trace), completed=len(results),
         qps=snap["qps"], p50_s=snap["p50_s"], p99_s=snap["p99_s"]))
     print(f"[bench_serve] appended {hist}")
-    # same criterion as the standalone --check gate, by construction
-    check_record(args.out)
+    # same criterion as the standalone --check gates, by construction
+    if args.chaos:
+        check_chaos_record(args.out)
+    else:
+        check_record(args.out)
     return record
 
 

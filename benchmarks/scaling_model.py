@@ -64,6 +64,7 @@ class MethodModel:
     # hide kinds: "none" (blocking), "spmv", "vec" (one vector update)
     halo_hides: tuple = ()    # per SpMV: "interior" (overlappable) | "none"
     precond_applies: int = 0  # M^{-1} applications per iteration
+    refresh_spmvs: int = 0    # SpMV-equivalents per residual replacement
 
 
 #: derived from the solver registry — the per-iteration communication
@@ -71,7 +72,8 @@ class MethodModel:
 METHODS = {
     name: MethodModel(name, spec.spmvs_per_iter,
                       tuple((h,) for h in spec.reduction_hides),
-                      spec.halo_hides, spec.precond_applies_per_iter)
+                      spec.halo_hides, spec.precond_applies_per_iter,
+                      getattr(spec.method_def, "refresh_spmvs", 0))
     for name, spec in REGISTRY.items()
 }
 
@@ -83,7 +85,8 @@ def iteration_breakdown(method: str, nbar: int,
                         execution: str = "dataflow",
                         halo_mode: str = "concat",
                         precond: str | None = None,
-                        precond_params: dict | None = None) -> dict:
+                        precond_params: dict | None = None,
+                        refresh_every: int = 0) -> dict:
     """``execution``: "mpi" = every reduction blocks (the paper's MPI-only
     baseline); "dataflow" = reductions hide behind their overlap windows
     (what the task runtime buys in the paper / XLA buys here).
@@ -103,10 +106,18 @@ def iteration_breakdown(method: str, nbar: int,
     iteration; the payoff — fewer iterations — is the other axis of the
     trade-off (see benchmarks/table_iterations.py for measured counts).
 
+    ``refresh_every`` prices residual replacement (repro.resilience: the
+    merged/pipelined drift mitigation, ``SolverOptions.residual_replacement``)
+    as an amortised per-iteration term ``t_rr``: every N-th iteration pays
+    the method's ``refresh_spmvs`` SpMV-equivalents (memory + halo, never
+    hidden — the refresh sits on the critical path by construction) plus
+    one blocking stacked reduction to re-derive the recurrence scalars.
+    0 (the default) or a method with no refresh hook prices as 0.
+
     Returns the per-phase split ``{"t_mem", "t_halo", "t_precond",
-    "t_reduce", "total"}`` — the prediction ``repro.obs.attribution``
-    lines up against measured phase times; :func:`iteration_time` is its
-    ``total``.
+    "t_reduce", "t_rr", "total"}`` — the prediction
+    ``repro.obs.attribution`` lines up against measured phase times;
+    :func:`iteration_time` is its ``total``.
     """
     r = local_grid[0] * local_grid[1] * local_grid[2]
     m = METHODS[method]
@@ -152,8 +163,15 @@ def iteration_breakdown(method: str, nbar: int,
     # the ppermutes, applied to the global reduction.
     t_red = t_reduce(m, chips, noise=noise, execution=execution,
                      t_vec=t_vec, t_spmv=t_spmv, t_pre_apply=t_pre_apply)
+    # residual replacement, amortised over its period: refresh_spmvs
+    # un-hidden SpMVs + one blocking stacked reduction every N iterations
+    t_rr = 0.0
+    if refresh_every > 0 and m.refresh_spmvs:
+        t_rr = (m.refresh_spmvs * (t_spmv + t_halo_spmv)
+                + reduction_latency(chips, noise=noise)) / refresh_every
     return {"t_mem": t_mem, "t_halo": t_halo, "t_precond": t_pre,
-            "t_reduce": t_red, "total": t_mem + t_halo + t_pre + t_red}
+            "t_reduce": t_red, "t_rr": t_rr,
+            "total": t_mem + t_halo + t_pre + t_red + t_rr}
 
 
 def iteration_time(method: str, nbar: int, local_grid: tuple[int, int, int],

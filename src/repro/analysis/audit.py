@@ -56,6 +56,10 @@ STENCIL = "27pt"
 DONATION_MESHES = ("1d", "2d")
 #: methods whose mesh solve is fully compiled to check the granted alias
 ALIAS_METHODS = ("cg", "cg_merged", "bicgstab")
+#: methods whose whole mesh solve is compiled plain AND guarded to assert
+#: the breakdown guards ride existing carry scalars — identical collective
+#: counts with guards on (repro.resilience's zero-extra-collectives claim)
+GUARD_METHODS = ("cg", "cg_merged", "bicgstab_merged")
 #: the preconditioner bound for the precond-accepting methods' extra configs
 AUDIT_PRECOND_SWEEPS = 2
 
@@ -240,8 +244,30 @@ def worker_main() -> None:
                    .as_text()
         mesh_aliases[f"{name}|1d"] = input_output_aliases(ctext)
 
+    # --- guard invariance: arming the guards adds zero collectives ----------
+    # The breakdown guards (repro.resilience) must ride scalars the loop
+    # already carries post-psum; compile the WHOLE mesh solve plain and
+    # guarded (telemetry off, no residual replacement — the raise-policy
+    # configuration) and record each one's collective counts.
+    from repro.core.methods import GuardSpec
+    guard_invariance = {}
+    for name in GUARD_METHODS:
+        if methods is not None and name not in methods:
+            continue
+        mesh = meshes["1d"]
+        rec = {}
+        for mode, gs in (("plain", None), ("guarded", GuardSpec())):
+            fn, layout = solve_shardmap(prob, name, mesh, maxiter=5,
+                                        guard_spec=gs)
+            sh = NamedSharding(mesh, layout.spec())
+            sds = jax.ShapeDtypeStruct(prob.shape, prob.dtype, sharding=sh)
+            ctext = jax.jit(fn).lower(sds, sds).compile().as_text()
+            rec[mode] = count_collectives(ctext)
+        guard_invariance[f"{name}|1d"] = rec
+
     print(json.dumps({"comms": comms, "donate_mesh": donate_mesh,
-                      "local": local, "mesh_aliases": mesh_aliases}))
+                      "local": local, "mesh_aliases": mesh_aliases,
+                      "guard_invariance": guard_invariance}))
 
 
 def run_measurements(methods: list[str] | None = None, *,
@@ -341,6 +367,16 @@ def compare(measured: dict,
                 "donation", key, "input_output_alias",
                 expected=[1], actual=aliased,
                 detail="compiled mesh solve must reuse x0's buffer"))
+
+    # --- guard invariance ----------------------------------------------------
+    for key, rec in sorted(measured.get("guard_invariance", {}).items()):
+        if rec.get("guarded") != rec.get("plain"):
+            out.append(Violation(
+                "guard_invariance", key, "collectives",
+                expected=rec.get("plain"), actual=rec.get("guarded"),
+                detail="arming the breakdown guards must add zero "
+                       "collectives (guards ride carried post-psum "
+                       "scalars)"))
 
     # --- drift vs the committed baseline ------------------------------------
     if baseline is not None:

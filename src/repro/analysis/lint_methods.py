@@ -53,7 +53,8 @@ _PARAMS_ATTRS = frozenset({"get", "items", "keys", "values"})
 
 _MUTABLE_TYPES = (list, dict, set, bytearray)
 
-_FN_KINDS = ("init", "step", "finalize", "fused_init", "fused_step")
+_FN_KINDS = ("init", "step", "finalize", "fused_init", "fused_step",
+             "guard", "refresh")
 
 
 def _method_functions(mdef: MethodDef):

@@ -8,6 +8,7 @@ from repro.api.registry import (
     RegistryConsistencyError,
     SolverSpec,
     check_consistent_with_core,
+    fallback_chain,
     fused_solver_names,
     get_solver,
     register_solver,
@@ -30,6 +31,7 @@ __all__ = [
     "SolverSession",
     "SolverSpec",
     "check_consistent_with_core",
+    "fallback_chain",
     "fused_solver_names",
     "get_solver",
     "make_precond",

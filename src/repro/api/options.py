@@ -18,8 +18,18 @@ from repro.core.distributed import HALO_MODES
 #: accepted ``precond`` values ("none" + the repro.precond registry)
 from repro.precond import precond_names
 
+from repro.core.methods import GuardSpec
+
 #: accepted ``layout`` values and what they resolve to (see backend.py)
 LAYOUTS = ("auto", "local", "1d", "2d", "3d")
+
+#: accepted ``on_breakdown`` recovery policies (repro.resilience):
+#: "raise"    — raise SolveBreakdown on an abnormal guarded exit
+#: "none"     — return the typed SolveResult.status untouched
+#: "restart"  — re-solve from the last finite iterate, up to max_restarts
+#: "fallback" — retry down the robustness ladder: pallas→XLA first, then
+#:              variant_of back to the classical method
+ON_BREAKDOWN = ("raise", "none", "restart", "fallback")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,6 +107,29 @@ class SolverOptions:
                   buffer write per iteration to the compiled loop.
     telemetry_buffer: row bound of the telemetry buffer (clamped to
                   ``maxiter + 1``); only read when ``telemetry=True``.
+    guards:       arm the per-iteration breakdown guards (repro.resilience):
+                  NaN scalars, divergence, the method's ρ-underflow /
+                  negative-curvature guard and optional stagnation
+                  detection, all riding scalars the loop already carries
+                  (zero extra collectives).  OFF by default — with guards
+                  off and ``on_breakdown="raise"`` the compiled solve is
+                  bitwise the pre-resilience one except for the always-on
+                  typed ``SolveResult.status``.
+    on_breakdown: what ``SolverSession.solve`` does when a GUARDED solve
+                  exits with status breakdown/diverged/stagnated (see
+                  ``ON_BREAKDOWN``).  Any value other than "raise"/"none"
+                  implies ``guards``.  Applies to single-RHS ``solve``
+                  only; ``solve_batched`` always returns per-lane statuses.
+    max_restarts: attempt budget for the "restart"/"fallback" policies.
+    residual_replacement: every N > 0 iterations, re-derive the TRUE
+                  residual (and the recurrence images) from the iterate —
+                  the drift mitigation for the merged/pipelined variants
+                  (methods whose MethodDef declares a ``refresh`` hook).
+                  Cost: ``refresh_spmvs`` SpMV-equivalents per refresh,
+                  priced by the scaling model's ``t_rr`` term.  0 = off.
+    breakdown_eps / divergence_factor / stagnation_window / stagnation_rtol:
+                  GuardSpec thresholds (see ``core.methods.GuardSpec``);
+                  read only when guards are armed.
     """
 
     tol: float = 1e-6
@@ -114,6 +147,30 @@ class SolverOptions:
     donate: bool = True
     telemetry: bool = False
     telemetry_buffer: int = 256
+    guards: bool = False
+    on_breakdown: str = "raise"
+    max_restarts: int = 2
+    residual_replacement: int = 0
+    breakdown_eps: float = 1e-12
+    divergence_factor: float = 1e8
+    stagnation_window: int = 0
+    stagnation_rtol: float = 1.0
+
+    def guards_armed(self) -> bool:
+        """Whether the breakdown guards compile into the loop cond: armed
+        explicitly (``guards=True``) or implied by an active recovery
+        policy (restart/fallback need the typed early exit to act on)."""
+        return self.guards or self.on_breakdown in ("restart", "fallback")
+
+    def guard_spec(self) -> GuardSpec | None:
+        """The GuardSpec the MethodDef driver takes; None when disarmed."""
+        if not self.guards_armed():
+            return None
+        return GuardSpec(
+            breakdown_eps=self.breakdown_eps,
+            divergence_factor=self.divergence_factor,
+            stagnation_window=self.stagnation_window,
+            stagnation_rtol=self.stagnation_rtol)
 
     def telemetry_rows(self) -> int:
         """Effective telemetry buffer rows: 0 when disabled, else the
@@ -142,6 +199,19 @@ class SolverOptions:
         if self.telemetry_buffer < 1:
             raise ValueError(
                 f"telemetry_buffer must be >= 1, got {self.telemetry_buffer}")
+        if self.on_breakdown not in ON_BREAKDOWN:
+            raise ValueError(
+                f"unknown on_breakdown {self.on_breakdown!r}; "
+                f"options: {ON_BREAKDOWN}")
+        if self.max_restarts < 0:
+            raise ValueError(
+                f"max_restarts must be >= 0, got {self.max_restarts}")
+        if self.residual_replacement < 0:
+            raise ValueError(
+                f"residual_replacement must be >= 0 (0 disables), got "
+                f"{self.residual_replacement}")
+        if self.guards_armed():
+            self.guard_spec()   # validates the GuardSpec thresholds
 
     def replace(self, **kw) -> "SolverOptions":
         return dataclasses.replace(self, **kw)

@@ -245,6 +245,21 @@ def variant_pairs() -> list[tuple[str, str]]:
                   if s.variant_of is not None)
 
 
+def fallback_chain(name: str) -> list[str]:
+    """``[name, its variant_of, ...]`` down to the classical method — the
+    robustness ladder ``on_breakdown="fallback"`` walks (repro.resilience):
+    each rung trades back a communication-hiding rearrangement for the
+    numerically plainer recurrence it was derived from.  Cycle-safe (a
+    malformed registry cannot loop) and always at least ``[name]``."""
+    chain, seen = [name], {name}
+    cur = get_solver(name)
+    while cur.variant_of is not None and cur.variant_of not in seen:
+        chain.append(cur.variant_of)
+        seen.add(cur.variant_of)
+        cur = get_solver(cur.variant_of)
+    return chain
+
+
 # --- the seven methods of the paper ------------------------------------------
 # Reduction structure per §3.1/Fig. 1; SpMV counts per the touched-elements
 # model.  Stationary methods report one residual-norm reduction per sweep.

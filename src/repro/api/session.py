@@ -33,13 +33,18 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.api.backend import (Backend, resolve_backend, resolve_halo_mode,
                                resolve_matvec, resolve_precond)
 from repro.api.options import SolverOptions
-from repro.api.registry import SolverSpec, get_solver
+from repro.api.registry import SolverSpec, fallback_chain, get_solver
 from repro.api.timing import timed_result
 from repro.core.compat import shard_map
 from repro.core.distributed import DistributedOp, solve_shardmap, solve_step_shardmap
+from repro.core.methods import (STATUS_BREAKDOWN, STATUS_DIVERGED,
+                                STATUS_STAGNATED, SolveBreakdown, status_name)
 from repro.core.problems import HPCGProblem, make_problem
 from repro.core.solvers import LocalOp, SolveResult
 from repro.obs import trace as obs
+
+#: guarded exit statuses the recovery policies act on
+_RECOVERABLE = (STATUS_BREAKDOWN, STATUS_DIVERGED, STATUS_STAGNATED)
 
 
 class SolverSession:
@@ -106,6 +111,19 @@ class SolverSession:
                 f"preconditioner, but {self.precond.describe()} declares "
                 f"spd_preserving=False; use pbicgstab or an SPD-preserving "
                 f"M (CG's short recurrence silently breaks down otherwise)")
+        mdef = getattr(self.spec, "method_def", None)
+        if (self.options.residual_replacement
+                and not (mdef is not None and mdef.has_refresh)):
+            raise ValueError(
+                f"residual_replacement={self.options.residual_replacement} "
+                f"but method {self.method!r} declares no refresh hook; "
+                f"residual replacement targets the merged/pipelined variants "
+                f"(MethodDef.refresh) — the classical recurrences already "
+                f"compute the true residual")
+        # kept for the fallback ladder (sessions rebuilt on the same mesh)
+        self._mesh_arg = mesh if mesh is not None else getattr(
+            self.backend, "mesh", None)
+        self._fallbacks: list[tuple[str, "SolverSession"]] | None = None
         # AOT-compiled executables keyed by input shape: ``grid`` for the
         # single-RHS solve, ``(batch, *grid)`` for the batched one.  Each
         # entry is a ``jax.stages.Compiled`` (the ``.lower().compile()``
@@ -145,6 +163,11 @@ class SolverSession:
         rows = self.options.telemetry_rows()
         if rows:
             kw["telemetry"] = rows
+        gs = self.options.guard_spec()
+        if gs is not None:
+            kw["guard_spec"] = gs
+        if self.options.residual_replacement:
+            kw["refresh_every"] = self.options.residual_replacement
         return kw
 
     def _use_fused_body(self) -> bool:
@@ -183,7 +206,9 @@ class SolverSession:
                     ops = Ops(A, b, norm_ref=opts.norm_ref)
                     return run_method(mdef, ops, x0, tol=opts.tol,
                                       maxiter=opts.maxiter, fused=True,
-                                      telemetry=opts.telemetry_rows())
+                                      telemetry=opts.telemetry_rows(),
+                                      guard_spec=opts.guard_spec(),
+                                      refresh_every=opts.residual_replacement)
 
                 return jax.jit(run_fused, **jit_kw)
             # fused kernels inside the shard_map body (PallasOp wraps the
@@ -192,7 +217,9 @@ class SolverSession:
                 self.problem, self.method, self.backend.mesh,
                 dims_map=opts.dims_map, tol=opts.tol, maxiter=opts.maxiter,
                 norm_ref=opts.norm_ref, halo_mode=self.halo_mode,
-                pallas_fused=True, telemetry=opts.telemetry_rows())
+                pallas_fused=True, telemetry=opts.telemetry_rows(),
+                guard_spec=opts.guard_spec(),
+                refresh_every=opts.residual_replacement)
             return jax.jit(fn, **jit_kw)
         if self.backend.kind == "local":
             A = LocalOp(self.problem.stencil, matvec_padded=self._matvec)
@@ -207,7 +234,9 @@ class SolverSession:
             dims_map=opts.dims_map, tol=opts.tol, maxiter=opts.maxiter,
             norm_ref=opts.norm_ref, matvec_padded=self._matvec,
             halo_mode=self.halo_mode, precond=self.precond,
-            telemetry=opts.telemetry_rows())
+            telemetry=opts.telemetry_rows(),
+            guard_spec=opts.guard_spec(),
+            refresh_every=opts.residual_replacement)
         return jax.jit(fn, **jit_kw)
 
     def _place(self, x: jax.Array, *, batched: bool = False) -> jax.Array:
@@ -271,8 +300,10 @@ class SolverSession:
         self._executable(shape, self._build_batched_fn, (ab, ab))
         return time.perf_counter() - t0
 
-    def solve(self, b: jax.Array | None = None,
-              x0: jax.Array | None = None) -> SolveResult:
+    def _solve_once(self, b: jax.Array | None = None,
+                    x0: jax.Array | None = None) -> SolveResult:
+        """One compiled solve, no recovery policy (the :meth:`solve` body
+        pre-resilience; restart/fallback attempts re-enter here)."""
         with obs.span("solve", method=self.method,
                       grid=list(self.problem.shape),
                       backend=self.backend.kind):
@@ -288,6 +319,95 @@ class SolverSession:
                     # not the async dispatch (result semantics unchanged)
                     res = jax.block_until_ready(res)
         return res
+
+    def solve(self, b: jax.Array | None = None,
+              x0: jax.Array | None = None) -> SolveResult:
+        """Solve one system, applying ``options.on_breakdown`` when the
+        breakdown guards are armed and the solve exits with an abnormal
+        typed status (breakdown / diverged / stagnated):
+
+        * ``"raise"``    — raise :class:`SolveBreakdown` (result attached);
+        * ``"none"``     — return the result, status untouched;
+        * ``"restart"``  — re-solve from the last finite iterate (zeros if
+          the iterate is poisoned), up to ``max_restarts`` attempts;
+        * ``"fallback"`` — walk the robustness ladder: the same method on
+          the plain XLA path first, then each ``variant_of`` ancestor down
+          to the classical method.
+
+        With guards disarmed (the default) this is exactly the compiled
+        solve — no status inspection, no host sync.  Each recovery attempt
+        is traced as a ``resilience.attempt`` span (repro.obs)."""
+        res = self._solve_once(b, x0)
+        opts = self.options
+        if opts.guard_spec() is None or opts.on_breakdown == "none":
+            return res
+        if int(res.status) not in _RECOVERABLE:
+            return res
+        return self._recover(res, b)
+
+    def _recover(self, res: SolveResult, b: jax.Array | None) -> SolveResult:
+        """Apply the armed ``on_breakdown`` policy to an abnormal exit."""
+        opts = self.options
+        if opts.on_breakdown == "raise":
+            raise SolveBreakdown(self.method, res)
+        b = self.problem.b() if b is None else b
+        if opts.on_breakdown == "restart":
+            for attempt in range(1, opts.max_restarts + 1):
+                x_start = res.x
+                if not bool(jnp.all(jnp.isfinite(x_start))):
+                    x_start = jnp.zeros_like(b)
+                with obs.span("resilience.attempt", policy="restart",
+                              method=self.method, attempt=attempt,
+                              from_status=status_name(res.status)):
+                    res = self._solve_once(b, x_start)
+                if int(res.status) not in _RECOVERABLE:
+                    break
+            return res
+        for attempt, (name, sess) in enumerate(self._fallback_ladder(), 1):
+            if attempt > max(1, opts.max_restarts):
+                break
+            with obs.span("resilience.attempt", policy="fallback",
+                          method=name, attempt=attempt,
+                          from_status=status_name(res.status)):
+                res = sess._solve_once(b, None)
+            if int(res.status) not in _RECOVERABLE:
+                break
+        return res
+
+    def _fallback_ladder(self) -> list[tuple[str, "SolverSession"]]:
+        """Sessions the ``"fallback"`` policy walks, built lazily and cached
+        for the session's lifetime: the same method with every kernel
+        override retreated to the reference XLA operator (Pallas / custom
+        ``matvec_padded`` / custom ``dot`` dropped) when one was active,
+        then each ``variant_of`` ancestor down to the classical method —
+        the preconditioner is dropped for rungs without an ``M=`` hook and
+        residual replacement for rungs without a refresh hook.  Ladder
+        sessions run with guards armed but ``on_breakdown="none"``: their
+        typed status gates the walk without recursing into recovery."""
+        if self._fallbacks is not None:
+            return self._fallbacks
+        opts = self.options
+        base = opts.replace(on_breakdown="none", guards=True, pallas=False,
+                            matvec_padded=None, dot=None)
+        plan: list[tuple[str, SolverOptions]] = []
+        if (opts.pallas or opts.matvec_padded is not None
+                or opts.dot is not None):
+            plan.append((self.method, base))
+        for name in fallback_chain(self.method)[1:]:
+            spec = get_solver(name)
+            o = base
+            if not spec.accepts_precond and o.precond != "none":
+                o = o.replace(precond="none", precond_params=None)
+            mdef = getattr(spec, "method_def", None)
+            if o.residual_replacement and not (mdef is not None
+                                               and mdef.has_refresh):
+                o = o.replace(residual_replacement=0)
+            plan.append((name, o))
+        self._fallbacks = [
+            (name, SolverSession(self.problem, method=name, options=o,
+                                 mesh=self._mesh_arg))
+            for name, o in plan]
+        return self._fallbacks
 
     def timed_solve(self, b: jax.Array | None = None,
                     x0: jax.Array | None = None, *,
@@ -345,7 +465,8 @@ class SolverSession:
             in_specs=(bspec, bspec),
             out_specs=SolveResult(
                 x=bspec, iters=P(), res_norm=P(), history=P(),
-                telemetry=P() if opts.telemetry_rows() else None),
+                telemetry=P() if opts.telemetry_rows() else None,
+                status=P()),
         )
         return jax.jit(fn, **jit_kw)
 
@@ -366,6 +487,9 @@ class SolverSession:
 
         ``bs``/``x0s``: (batch, nx, ny, nz); ``x0s`` defaults to zeros.
         Returns a ``SolveResult`` whose leaves carry a leading batch axis.
+        ``on_breakdown`` recovery never applies here: one poisoned lane
+        must not raise or re-solve the whole batch — callers (the serve
+        layer's poison quarantine) read the per-lane ``status`` instead.
         """
         with obs.span("solve", method=self.method,
                       grid=list(self.problem.shape),

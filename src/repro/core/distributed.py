@@ -318,6 +318,8 @@ def solve_shardmap(
     precond=None,
     pallas_fused: bool = False,
     telemetry: int = 0,
+    guard_spec=None,
+    refresh_every: int = 0,
 ):
     """Build the shard_map-wrapped distributed solver; returns (fn, in_specs).
 
@@ -335,6 +337,14 @@ def solve_shardmap(
     the loop carry; the recorded scalars are post-psum (replicated), so the
     buffer rides an unsharded ``P()`` out_spec.  ``telemetry=0`` keeps the
     out-spec tree (and the lowered HLO) bit-for-bit the pre-telemetry one.
+
+    Resilience (repro.resilience): ``guard_spec``/``refresh_every`` are
+    forwarded to the driver.  Guards compare post-psum (replicated)
+    scalars, so every shard exits the while-loop on the same iteration
+    with no extra collectives; the residual-replacement ``lax.cond`` body
+    re-runs the method's own halo exchange + stacked psum, so both
+    branches stay replication-consistent under shard_map.  The typed
+    ``status`` scalar is replicated and rides a ``P()`` out_spec.
     """
     mdef = _check_method(method, precond, pallas_fused, matvec_padded)
     layout = make_layout(mesh, dims_map)
@@ -345,7 +355,8 @@ def solve_shardmap(
                          halo_mode=halo_mode, precond=precond,
                          norm_ref=norm_ref, pallas_fused=pallas_fused)
         return run_method(mdef, ops, x0_loc, tol=tol, maxiter=maxiter,
-                          fused=pallas_fused, telemetry=telemetry)
+                          fused=pallas_fused, telemetry=telemetry,
+                          guard_spec=guard_spec, refresh_every=refresh_every)
 
     spec = layout.spec()
     fn = shard_map(
@@ -353,7 +364,8 @@ def solve_shardmap(
         mesh=mesh,
         in_specs=(spec, spec),
         out_specs=SolveResult(x=spec, iters=P(), res_norm=P(), history=P(),
-                              telemetry=P() if telemetry else None),
+                              telemetry=P() if telemetry else None,
+                              status=P()),
     )
     return fn, layout
 

@@ -79,6 +79,80 @@ import jax.numpy as jnp
 from jax import lax
 
 
+#: typed loop-exit statuses (``SolveResult.status``, repro.resilience).
+#: Always computed — classification is a handful of scalar ``where``s on
+#: values the loop already carries, so it adds no collectives and no cost.
+STATUS_CONVERGED = 0    # res_scalar dropped below (tol * norm_ref)^2
+STATUS_MAXITER = 1      # iteration budget exhausted, residual still finite
+STATUS_BREAKDOWN = 2    # NaN scalars or a method guard fired (rho/omega
+#                         underflow, negative curvature on a non-SPD operator)
+STATUS_DIVERGED = 3     # residual blew past divergence_factor^2 * ||r0||^2
+STATUS_STAGNATED = 4    # no relative progress for stagnation_window iters
+
+STATUS_NAMES = ("converged", "maxiter", "breakdown", "diverged", "stagnated")
+
+
+def status_name(code) -> str:
+    """Human name for a ``SolveResult.status`` code (host-side helper)."""
+    return STATUS_NAMES[int(code)]
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardSpec:
+    """Breakdown-guard thresholds for the resilient driver (opt-in).
+
+    Every check reads scalars the while-loop already carries (post-psum,
+    hence replicated under shard_map) — enabling guards changes neither the
+    collective count nor the reduction schedule, which is what the
+    ``repro.analysis`` guard-invariance audit asserts.
+
+    ``breakdown_eps``      ρ-underflow threshold for the BiCGStab family
+                           (fires when ρ² < ε²·‖r₀‖²·‖r‖²).  Conservative
+                           default: only a genuine orthogonality collapse
+                           trips it.
+    ``divergence_factor``  exit with ``diverged`` once the squared residual
+                           exceeds ``factor² · max(‖r₀‖², thresh²)``.
+    ``stagnation_window``  0 disables; N > 0 exits with ``stagnated`` after
+                           N consecutive iterations without the squared
+                           residual improving below ``stagnation_rtol`` ×
+                           the best seen so far.
+    """
+
+    breakdown_eps: float = 1e-12
+    divergence_factor: float = 1e8
+    stagnation_window: int = 0
+    stagnation_rtol: float = 1.0
+
+    def __post_init__(self):
+        if self.breakdown_eps < 0 or self.divergence_factor <= 1:
+            raise ValueError(
+                f"GuardSpec: breakdown_eps must be >= 0 and "
+                f"divergence_factor > 1, got {self.breakdown_eps!r}/"
+                f"{self.divergence_factor!r}")
+        if self.stagnation_window < 0 or not 0 < self.stagnation_rtol <= 1:
+            raise ValueError(
+                f"GuardSpec: stagnation_window >= 0 and 0 < stagnation_rtol "
+                f"<= 1 required, got {self.stagnation_window!r}/"
+                f"{self.stagnation_rtol!r}")
+
+
+class SolveBreakdown(RuntimeError):
+    """A guarded solve exited abnormally under ``on_breakdown="raise"``.
+
+    Carries the method name and the full :class:`SolveResult` (``.method``,
+    ``.result``) so callers can inspect the typed status, the iterate and
+    the residual history of the failed attempt.
+    """
+
+    def __init__(self, method: str, result: "SolveResult"):
+        self.method = method
+        self.result = result
+        super().__init__(
+            f"{method}: solve exited with status="
+            f"{status_name(result.status)!r} after {int(result.iters)} "
+            f"iterations (res_norm={float(result.res_norm):.3e})")
+
+
 class SolveResult(NamedTuple):
     x: jax.Array
     iters: jax.Array          # number of completed iterations
@@ -92,6 +166,10 @@ class SolveResult(NamedTuple):
     #: the lowered HLO and every shard_map out_spec are bit-for-bit the
     #: pre-telemetry ones.
     telemetry: jax.Array | None = None
+    #: typed loop-exit status (int32, one of the ``STATUS_*`` codes above).
+    #: ``run_method`` always fills it; the ``None`` default only keeps
+    #: hand-built results (tests, out_spec templates) constructible.
+    status: jax.Array | None = None
 
 
 def _default_dot(a: jax.Array, b: jax.Array) -> jax.Array:
@@ -219,6 +297,21 @@ class MethodDef:
     fused_kernels: tuple[str, ...] = ()   # PallasOp hooks the fused body uses
     fused_init: Callable | None = None
     fused_step: Callable | None = None
+    #: optional breakdown guard ``(ops, state, rr0, eps) -> bool``: True
+    #: means the next step would amplify a numerical breakdown (ρ/ω
+    #: underflow, negative curvature).  Evaluated on carried post-psum
+    #: scalars only — it must add no reductions.  None = generic NaN/
+    #: divergence guards only.
+    guard: Callable | None = None
+    #: optional residual replacement ``(ops, x0, state) -> state``:
+    #: recompute the TRUE residual (and the recurrence images derived from
+    #: it) from the current iterate, bounding the O(ε·κ) per-iteration
+    #: recurrence drift of the merged/pipelined variants.  Applied every
+    #: ``refresh_every`` iterations by the resilient driver.
+    refresh: Callable | None = None
+    #: SpMV-equivalents one refresh costs (scaling-model price of the
+    #: residual-replacement cadence); required iff ``refresh`` is set.
+    refresh_spmvs: int = 0
 
     def __post_init__(self):
         if self.res_scalar not in self.scalars:
@@ -231,6 +324,10 @@ class MethodDef:
                 f"declared together")
         if self.fused_step is not None and self.fused_init is None:
             raise ValueError(f"{self.name!r}: fused_step without fused_init")
+        if (self.refresh is None) != (self.refresh_spmvs == 0):
+            raise ValueError(
+                f"{self.name!r}: refresh and refresh_spmvs must be declared "
+                f"together (the scaling model prices every refresh hook)")
 
     @property
     def res_index(self) -> int:
@@ -240,6 +337,12 @@ class MethodDef:
     @property
     def has_fused_body(self) -> bool:
         return self.fused_step is not None
+
+    @property
+    def has_refresh(self) -> bool:
+        """Whether the method declares a residual-replacement hook — the
+        capability ``SolverOptions.residual_replacement`` queries."""
+        return self.refresh is not None
 
 
 METHODS: dict[str, MethodDef] = {}
@@ -275,9 +378,24 @@ def method_names() -> list[str]:
 # The generic driver: MethodDef + Ops -> a whole solve
 # =============================================================================
 
+def _status_basic(res2, thresh2):
+    """Loop-exit classification from the residual scalar alone.
+
+    The plain driver's cond (``res2 >= thresh2``) already exits on NaN
+    (every comparison with NaN is False) — this names WHY the loop exited
+    instead of letting a NaN ``res_norm`` masquerade as convergence.
+    """
+    status = jnp.where(res2 < thresh2, STATUS_CONVERGED, STATUS_MAXITER)
+    status = jnp.where(jnp.isinf(res2), STATUS_DIVERGED, status)
+    status = jnp.where(jnp.isnan(res2), STATUS_BREAKDOWN, status)
+    return status.astype(jnp.int32)
+
+
 def run_method(mdef: MethodDef, ops: Ops, x0: jax.Array, *,
                tol: float = 1e-6, maxiter: int | None = None,
-               fused: bool = False, telemetry: int = 0) -> SolveResult:
+               fused: bool = False, telemetry: int = 0,
+               guard_spec: GuardSpec | None = None,
+               refresh_every: int = 0) -> SolveResult:
     """Run ``mdef`` to convergence: ``lax.while_loop`` around its ``step``.
 
     The convergence check, the residual history and the reported
@@ -294,17 +412,48 @@ def run_method(mdef: MethodDef, ops: Ops, x0: jax.Array, *,
     donation-safe).  ``telemetry=0`` (the default) takes a code path
     byte-identical to the pre-telemetry driver and returns
     ``SolveResult.telemetry = None``.
+
+    Resilience (repro.resilience):
+
+    * ``SolveResult.status`` is ALWAYS filled with a typed exit code —
+      with everything below disabled it is classified post-loop from the
+      residual scalar alone (:func:`_status_basic`), so the loop, its
+      carry and its collectives are untouched.
+    * ``guard_spec=GuardSpec(...)`` arms per-iteration breakdown guards in
+      the loop cond: NaN in any carried scalar, divergence past
+      ``divergence_factor``, the method's own ``guard`` hook (ρ-underflow,
+      negative curvature) and optional stagnation detection.  A fired
+      guard exits BEFORE the poisoning step runs, preserving the last
+      finite iterate.  Guards read carried post-psum scalars only — zero
+      extra collectives (audited by ``repro.analysis``).
+    * ``refresh_every=N`` applies the method's residual-replacement hook
+      every N iterations (methods with ``refresh`` declared — the
+      merged/pipelined variants), bounding recurrence drift at a priced
+      cost of ``refresh_spmvs`` SpMV-equivalents per refresh.
     """
     if maxiter is None:
         maxiter = mdef.default_maxiter
     if fused and not mdef.has_fused_body:
         raise ValueError(f"{mdef.name!r} declares no fused kernels")
+    if refresh_every < 0:
+        raise ValueError(f"refresh_every must be >= 0, got {refresh_every}")
+    if refresh_every and mdef.refresh is None:
+        raise ValueError(
+            f"{mdef.name!r} declares no residual-replacement hook; "
+            f"refresh_every applies only to methods with one "
+            f"(the merged/pipelined variants)")
     init = mdef.fused_init if fused else mdef.init
     step = mdef.fused_step if fused else mdef.step
     thresh2 = (tol * ops.norm_ref) ** 2
     ridx = mdef.res_index
     state = tuple(init(ops, x0))
     hist = _hist_init(maxiter, jnp.sqrt(state[ridx]), ops.b.dtype)
+
+    if guard_spec is not None or refresh_every:
+        return _run_resilient(mdef, ops, x0, step, state, hist,
+                              thresh2=thresh2, maxiter=maxiter,
+                              telemetry=telemetry, guard_spec=guard_spec,
+                              refresh_every=refresh_every)
 
     if not telemetry:
         def cond(c):
@@ -320,7 +469,8 @@ def run_method(mdef: MethodDef, ops: Ops, x0: jax.Array, *,
         state, k, hist = lax.while_loop(cond, body, (state, 0, hist))
         x = mdef.finalize(ops, x0, state) if mdef.finalize else state[0]
         return SolveResult(x=x, iters=k, res_norm=jnp.sqrt(state[ridx]),
-                           history=hist)
+                           history=hist,
+                           status=_status_basic(state[ridx], thresh2))
 
     cap = min(int(telemetry), maxiter + 1)
     nvec = len(mdef.vectors)
@@ -346,12 +496,138 @@ def run_method(mdef: MethodDef, ops: Ops, x0: jax.Array, *,
     state, k, hist, tele = lax.while_loop(cond, body, (state, 0, hist, tele))
     x = mdef.finalize(ops, x0, state) if mdef.finalize else state[0]
     return SolveResult(x=x, iters=k, res_norm=jnp.sqrt(state[ridx]),
-                       history=hist, telemetry=tele)
+                       history=hist, telemetry=tele,
+                       status=_status_basic(state[ridx], thresh2))
+
+
+def _run_resilient(mdef: MethodDef, ops: Ops, x0, step, state, hist, *,
+                   thresh2, maxiter: int, telemetry: int,
+                   guard_spec: GuardSpec | None,
+                   refresh_every: int) -> SolveResult:
+    """The guarded/refreshing driver loop (run_method's opt-in slow path).
+
+    Carries a dict pytree so the optional extras (telemetry rows,
+    stagnation counters) ride along only when requested.  All guard terms
+    are elementwise ops on carried post-psum scalars — under shard_map they
+    are replicated, so every shard takes the same branch and no collective
+    is added (the invariant ``repro.analysis`` audits).
+    """
+    guards_on = guard_spec is not None
+    gs = guard_spec if guards_on else GuardSpec()
+    ridx = mdef.res_index
+    nvec = len(mdef.vectors)
+    dt = hist.dtype
+    window = gs.stagnation_window if guards_on else 0
+    rr0 = state[ridx]
+    # divergence ceiling relative to the larger of ||r0||^2 and the stop
+    # threshold, so near-converged starts don't trip it on noise
+    div2 = (gs.divergence_factor ** 2) * jnp.maximum(
+        rr0, jnp.asarray(thresh2, dtype=jnp.asarray(rr0).dtype))
+
+    def _nan_scalars(state):
+        bad = jnp.isnan(state[ridx])
+        for s in state[nvec:]:
+            bad = bad | jnp.isnan(s)
+        return bad
+
+    def _guard_fired(state):
+        if mdef.guard is None:
+            return jnp.asarray(False)
+        return mdef.guard(ops, state, rr0, gs.breakdown_eps)
+
+    def _scal_row(state):
+        return jnp.stack([jnp.asarray(s).astype(dt) for s in state[nvec:]])
+
+    carry = {"state": state, "k": 0, "hist": hist}
+    if telemetry:
+        cap = min(int(telemetry), maxiter + 1)
+        tele = jnp.full((cap, len(mdef.scalars)), jnp.nan, dt)
+        carry["tele"] = tele.at[0].set(_scal_row(state))
+    if window:
+        carry["best2"] = rr0
+        carry["since"] = 0
+
+    def cond(c):
+        state, k = c["state"], c["k"]
+        go = (state[ridx] >= thresh2) & (k < maxiter)
+        if guards_on:
+            # pre-step guards: a firing exits with the LAST FINITE iterate
+            bad = _nan_scalars(state) | _guard_fired(state) \
+                | (state[ridx] > div2)
+            if window:
+                bad = bad | (c["since"] >= window)
+            go = go & ~bad
+        return go
+
+    def body(c):
+        k = c["k"]
+        state = tuple(step(ops, c["state"]))
+        if refresh_every:
+            state = lax.cond(
+                (k + 1) % refresh_every == 0,
+                lambda s: tuple(mdef.refresh(ops, x0, s)),
+                lambda s: s, state)
+        out = {"state": state, "k": k + 1,
+               "hist": c["hist"].at[k + 1].set(
+                   jnp.sqrt(state[ridx]).astype(dt))}
+        if telemetry:
+            cap = c["tele"].shape[0]
+            out["tele"] = c["tele"].at[jnp.minimum(k + 1, cap - 1)].set(
+                _scal_row(state))
+        if window:
+            res2 = state[ridx]
+            improved = res2 < gs.stagnation_rtol * c["best2"]
+            out["best2"] = jnp.minimum(res2, c["best2"])
+            out["since"] = jnp.where(improved, 0, c["since"] + 1)
+        return out
+
+    fc = lax.while_loop(cond, body, carry)
+    state, k, hist = fc["state"], fc["k"], fc["hist"]
+    x = mdef.finalize(ops, x0, state) if mdef.finalize else state[0]
+    res2 = state[ridx]
+    nan_bad = _nan_scalars(state)
+    i32 = jnp.int32
+    status = jnp.asarray(STATUS_MAXITER, i32)
+    if window:
+        status = jnp.where(fc["since"] >= window,
+                           jnp.asarray(STATUS_STAGNATED, i32), status)
+    diverged = jnp.isinf(res2)
+    if guards_on:
+        diverged = diverged | (res2 > div2)
+    status = jnp.where(diverged, jnp.asarray(STATUS_DIVERGED, i32), status)
+    broke = nan_bad if not guards_on else (nan_bad | _guard_fired(state))
+    status = jnp.where(broke, jnp.asarray(STATUS_BREAKDOWN, i32), status)
+    status = jnp.where((res2 < thresh2) & ~nan_bad,
+                       jnp.asarray(STATUS_CONVERGED, i32), status)
+    return SolveResult(x=x, iters=k, res_norm=jnp.sqrt(res2), history=hist,
+                       telemetry=fc.get("tele"), status=status)
 
 
 # =============================================================================
 # Krylov methods — conjugate gradients
 # =============================================================================
+
+def _rho_underflow_guard(rho_idx: int, rr_idx: int):
+    """BiCGStab-family breakdown guard: ρ = (r̂, r) collapsing relative to
+    ‖r̂‖‖r‖ ≈ ‖r₀‖‖r‖ means the shadow residual has become numerically
+    orthogonal — the next β/α division amplifies noise into the iterate.
+    Reads only carried post-psum scalars (flat-state indices are pinned by
+    the declared vectors/scalars layouts)."""
+    def guard(ops, state, rr0, eps):
+        rho, rr = state[rho_idx], state[rr_idx]
+        return rho * rho < (eps * eps) * rr0 * rr
+    return guard
+
+
+def _nonpositive_guard(idx: int):
+    """Negative-curvature/indefiniteness guard for the CG family: the
+    carried inner product at ``idx`` (p·Ap, r·z, w·r, ...) must stay
+    positive on an SPD operator — a non-positive value means A (or M) is
+    not SPD and the α division is about to change sign or blow up."""
+    def guard(ops, state, rr0, eps):
+        return state[idx] <= 0.0
+    return guard
+
 
 def _cg_init(ops, x0):
     r = ops.b - ops.matvec(x0)
@@ -414,7 +690,8 @@ def _cg_nb_finalize(ops, x0, state):
 register_method(MethodDef(
     name="cg_nb", vectors=("x", "r", "p", "Ap"), scalars=("an", "ad"),
     res_scalar="an", init=_cg_nb_init, step=_cg_nb_step,
-    finalize=_cg_nb_finalize, variant_of="cg"))
+    finalize=_cg_nb_finalize, variant_of="cg",
+    guard=_nonpositive_guard(5)))       # ad = p·Ap: negative curvature
 
 
 def _pcg_init(ops, x0):
@@ -447,7 +724,8 @@ def _pcg_step(ops, state):
 register_method(MethodDef(
     name="pcg", vectors=("x", "r", "p"), scalars=("rz", "rr"),
     res_scalar="rr", init=_pcg_init, step=_pcg_step,
-    variant_of="cg", accepts_precond=True))
+    variant_of="cg", accepts_precond=True,
+    guard=_nonpositive_guard(3)))       # rz = r·M⁻¹r: M or A not SPD
 
 
 def _cg_merged_scalars(gamma, delta, gamma_prev, alpha_prev):
@@ -519,13 +797,28 @@ def _cg_merged_fused_step(ops, state):
     return (x, r, p, s, w, gamma_new, delta_new, gamma, alpha)
 
 
+def _cg_merged_refresh(ops, x0, state):
+    """Residual replacement (van der Vorst–Ye / Cools): recompute the TRUE
+    residual from the iterate and rebuild every recurrence image (``s = A
+    p``, ``w = A r``) and scalar from it, discarding accumulated drift.
+    One stacked reduction, same shape as the step's own."""
+    x, r, p, s, w, gamma, delta, gamma_prev, alpha_prev = state
+    r = ops.b - ops.matvec(x)
+    s = ops.matvec(p)
+    w = ops.matvec(r)
+    gamma, delta = ops.dotn((r, r), (w, r))
+    return (x, r, p, s, w, gamma, delta, gamma_prev, alpha_prev)
+
+
 register_method(MethodDef(
     name="cg_merged", vectors=("x", "r", "p", "s", "w"),
     scalars=("gamma", "delta", "gamma_prev", "alpha_prev"),
     res_scalar="gamma", init=_cg_merged_init, step=_cg_merged_step,
     variant_of="cg", reduce_hide="merged",
     fused_kernels=("fused_cg_body", "spmv_dots"),
-    fused_init=_cg_merged_fused_init, fused_step=_cg_merged_fused_step))
+    fused_init=_cg_merged_fused_init, fused_step=_cg_merged_fused_step,
+    guard=_nonpositive_guard(6),        # delta = r·Ar: A not SPD
+    refresh=_cg_merged_refresh, refresh_spmvs=3))
 
 
 def _pcg_merged_init(ops, x0):
@@ -554,11 +847,31 @@ def _pcg_merged_step(ops, state):
     return (x, r, u, p, s, w, gamma_new, delta_new, rr_new, gamma, alpha)
 
 
+def _pcg_merged_guard(ops, state, rr0, eps):
+    # gamma = r·u (the M-inner product) and delta = u·Au must both stay
+    # positive when A and M are SPD
+    return (state[6] <= 0.0) | (state[7] <= 0.0)
+
+
+def _pcg_merged_refresh(ops, x0, state):
+    """Residual replacement for merged PCG: true r, fresh ``u = M⁻¹r`` and
+    recurrence images, all scalars from one stacked reduction."""
+    x, r, u, p, s, w, gamma, delta, rr, gamma_prev, alpha_prev = state
+    r = ops.b - ops.matvec(x)
+    u = ops.M(r)
+    w = ops.matvec(u)
+    s = ops.matvec(p)
+    gamma, delta, rr = ops.dotn((r, u), (w, u), (r, r))
+    return (x, r, u, p, s, w, gamma, delta, rr, gamma_prev, alpha_prev)
+
+
 register_method(MethodDef(
     name="pcg_merged", vectors=("x", "r", "u", "p", "s", "w"),
     scalars=("gamma", "delta", "rr", "gamma_prev", "alpha_prev"),
     res_scalar="rr", init=_pcg_merged_init, step=_pcg_merged_step,
-    variant_of="pcg", reduce_hide="merged", accepts_precond=True))
+    variant_of="pcg", reduce_hide="merged", accepts_precond=True,
+    guard=_pcg_merged_guard,
+    refresh=_pcg_merged_refresh, refresh_spmvs=3))
 
 
 def _cg_pipe_init(ops, x0):
@@ -593,11 +906,25 @@ def _cg_pipe_step(ops, state):
     return (x, r, w, p, s, z, gamma, alpha, gamma)
 
 
+def _cg_pipe_refresh(ops, x0, state):
+    """Residual replacement for pipelined CG: the three recurrence chains
+    (``w = A r``, ``s = A p``, ``z = A s``) all restart from the true
+    residual; one extra SpMV each plus the lagged ``rr`` recomputed."""
+    x, r, w, p, s, z, gamma_prev, alpha_prev, rr = state
+    r = ops.b - ops.matvec(x)
+    w = ops.matvec(r)
+    s = ops.matvec(p)
+    z = ops.matvec(s)
+    (rr,) = ops.dotn((r, r))
+    return (x, r, w, p, s, z, gamma_prev, alpha_prev, rr)
+
+
 register_method(MethodDef(
     name="cg_pipe", vectors=("x", "r", "w", "p", "s", "z"),
     scalars=("gamma_prev", "alpha_prev", "rr"), res_scalar="rr",
     init=_cg_pipe_init, step=_cg_pipe_step,
-    variant_of="cg", reduce_hide="pipelined"))
+    variant_of="cg", reduce_hide="pipelined",
+    refresh=_cg_pipe_refresh, refresh_spmvs=4))
 
 
 def _pcg_pipe_init(ops, x0):
@@ -632,11 +959,26 @@ def _pcg_pipe_step(ops, state):
     return (x, r, u, w, p, s, q, z, gamma, alpha, rr_new)
 
 
+def _pcg_pipe_refresh(ops, x0, state):
+    """Residual replacement for pipelined PCG: true r, fresh preconditioned
+    images ``u = M⁻¹r``/``q = M⁻¹s`` and SpMV images rebuilt from them."""
+    x, r, u, w, p, s, q, z, gamma_prev, alpha_prev, rr = state
+    r = ops.b - ops.matvec(x)
+    u = ops.M(r)
+    w = ops.matvec(u)
+    s = ops.matvec(p)
+    q = ops.M(s)
+    z = ops.matvec(q)
+    (rr,) = ops.dotn((r, r))
+    return (x, r, u, w, p, s, q, z, gamma_prev, alpha_prev, rr)
+
+
 register_method(MethodDef(
     name="pcg_pipe", vectors=("x", "r", "u", "w", "p", "s", "q", "z"),
     scalars=("gamma_prev", "alpha_prev", "rr"), res_scalar="rr",
     init=_pcg_pipe_init, step=_pcg_pipe_step,
-    variant_of="pcg", reduce_hide="pipelined", accepts_precond=True))
+    variant_of="pcg", reduce_hide="pipelined", accepts_precond=True,
+    refresh=_pcg_pipe_refresh, refresh_spmvs=4))
 
 
 # =============================================================================
@@ -671,7 +1013,8 @@ def _bicgstab_step(ops, state):
 register_method(MethodDef(
     name="bicgstab", vectors=("x", "r", "rhat", "p"),
     scalars=("rho", "rr"), res_scalar="rr",
-    init=_bicgstab_init, step=_bicgstab_step))
+    init=_bicgstab_init, step=_bicgstab_step,
+    guard=_rho_underflow_guard(4, 5)))
 
 
 def _pbicgstab_step(ops, state):
@@ -703,7 +1046,8 @@ register_method(MethodDef(
     name="pbicgstab", vectors=("x", "r", "rhat", "p"),
     scalars=("rho", "rr"), res_scalar="rr",
     init=_bicgstab_init, step=_pbicgstab_step,
-    variant_of="bicgstab", accepts_precond=True))
+    variant_of="bicgstab", accepts_precond=True,
+    guard=_rho_underflow_guard(4, 5)))
 
 
 def _bicgstab_b1_init(ops, x0):
@@ -824,13 +1168,35 @@ def _pbicgstab_merged_finalize(ops, x0, state):
     return x0 + ops.M(state[0])
 
 
+def _make_bicgstab_merged_refresh(preconditioned: bool):
+    def refresh(ops, x0, state):
+        """Residual replacement for single-reduction BiCGStab: recover the
+        TRUE residual from the iterate (via ``finalize`` in the
+        preconditioned ŷ space), rebuild every recurrence image ``w,t,s,z``
+        from it and recompute ρ, α and ‖r‖² in one stacked reduction."""
+        mv = _merged_bicgstab_matvec(ops, preconditioned)
+        y, r, w, t, p, s, z, rhat, rho, alpha, rr = state
+        x = x0 + ops.M(y) if preconditioned else y
+        r = ops.b - ops.matvec(x)
+        w = mv(r)
+        t = mv(w)
+        s = mv(p)
+        z = mv(s)
+        rho, rr, rhs = ops.dotn((rhat, r), (r, r), (rhat, s))
+        alpha = rho / rhs                  # α = ρ / r̂·(B p)
+        return (y, r, w, t, p, s, z, rhat, rho, alpha, rr)
+    return refresh
+
+
 register_method(MethodDef(
     name="bicgstab_merged",
     vectors=("x", "r", "w", "t", "p", "s", "z", "rhat"),
     scalars=("rho", "alpha", "rr"), res_scalar="rr",
     init=_make_bicgstab_merged_init(False),
     step=_make_bicgstab_merged_step(False),
-    variant_of="bicgstab", reduce_hide="merged"))
+    variant_of="bicgstab", reduce_hide="merged",
+    guard=_rho_underflow_guard(8, 10),
+    refresh=_make_bicgstab_merged_refresh(False), refresh_spmvs=5))
 
 register_method(MethodDef(
     name="pbicgstab_merged",
@@ -839,7 +1205,9 @@ register_method(MethodDef(
     init=_make_bicgstab_merged_init(True),
     step=_make_bicgstab_merged_step(True),
     finalize=_pbicgstab_merged_finalize,
-    variant_of="pbicgstab", reduce_hide="merged", accepts_precond=True))
+    variant_of="pbicgstab", reduce_hide="merged", accepts_precond=True,
+    guard=_rho_underflow_guard(8, 10),
+    refresh=_make_bicgstab_merged_refresh(True), refresh_spmvs=5))
 
 
 # =============================================================================

@@ -95,7 +95,8 @@ def make_solver(name: str) -> Callable:
     mdef = get_method(name)
 
     def solver(A, b, x0, *, tol=1e-6, maxiter=None, dot=None, norm_ref=None,
-               M=None, telemetry=0, **params) -> SolveResult:
+               M=None, telemetry=0, guard_spec=None, refresh_every=0,
+               **params) -> SolveResult:
         if M is not None and not mdef.accepts_precond:
             raise TypeError(f"{name!r} takes no preconditioner (M=)")
         unknown = set(params) - set(mdef.params)
@@ -106,7 +107,8 @@ def make_solver(name: str) -> Callable:
                 f"{sorted(mdef.params) or 'no extra parameters'}")
         ops = Ops(A, b, M=M, dot=dot, norm_ref=norm_ref, params=params)
         return run_method(mdef, ops, x0, tol=tol, maxiter=maxiter,
-                          telemetry=telemetry)
+                          telemetry=telemetry, guard_spec=guard_spec,
+                          refresh_every=refresh_every)
 
     solver.__name__ = name
     solver.__qualname__ = name

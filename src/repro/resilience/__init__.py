@@ -1,0 +1,31 @@
+# Breakdown-aware solving + fault injection (docs/API.md §Robustness).
+#
+# The solver side lives in repro.core.methods (typed SolveResult.status,
+# GuardSpec, the per-method guard/refresh hooks) and repro.api (the
+# on_breakdown recovery policies); this package re-exports that surface
+# and adds the chaos harness (inject.py) the tests, `make chaos-smoke`
+# and the serve layer's self-healing paths are exercised with.
+from repro.core.methods import (GuardSpec, STATUS_BREAKDOWN,
+                                STATUS_CONVERGED, STATUS_DIVERGED,
+                                STATUS_MAXITER, STATUS_NAMES,
+                                STATUS_STAGNATED, SolveBreakdown,
+                                status_name)
+from repro.resilience.inject import ChaosInjector, ChaosPlan, CompileFailure
+from repro.runtime.monitor import DeviceLost, SimulatedFailure
+
+__all__ = [
+    "ChaosInjector",
+    "ChaosPlan",
+    "CompileFailure",
+    "DeviceLost",
+    "GuardSpec",
+    "STATUS_BREAKDOWN",
+    "STATUS_CONVERGED",
+    "STATUS_DIVERGED",
+    "STATUS_MAXITER",
+    "STATUS_NAMES",
+    "STATUS_STAGNATED",
+    "SimulatedFailure",
+    "SolveBreakdown",
+    "status_name",
+]

@@ -1,0 +1,135 @@
+"""``python -m repro.resilience --smoke`` — the seeded chaos suite.
+
+One process runs every injectable fault class end-to-end against real
+solves and a real service, records the whole run as a ``repro.obs/v1``
+trace (``TRACE_chaos.jsonl`` — the CI artifact), and prints a JSON
+summary whose ``ok`` field gates ``make chaos-smoke``:
+
+  * NaN-poisoned operand  -> guarded solve exits ``status="breakdown"``
+    (and the ``raise`` policy raises ``SolveBreakdown``);
+  * fallback recovery     -> a merged variant's ladder reaches the
+    classical method and converges;
+  * compile failure       -> the broken bucket's requests become typed
+    ``compile_failed`` rejects, other buckets complete;
+  * injected preemption   -> in-place retry (backoff + seeded jitter)
+    completes the dispatch with zero dropped requests;
+  * poison quarantine     -> the poisoned lane is rejected, clean lanes
+    in the same batch converge;
+  * deadline              -> an expired request is rejected at dispatch.
+
+Everything is seeded: two runs produce the same injections, the same
+rejects, the same trace record names.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import numpy as np
+
+
+def run_smoke(out: str, seed: int = 0) -> dict:
+    from repro.api import SolverOptions, SolverSession
+    from repro.core.methods import SolveBreakdown
+    from repro.core.problems import enable_f64
+    from repro.obs import trace as obs
+    from repro.resilience import ChaosInjector, ChaosPlan
+    from repro.serve import Request, ServeConfig, SolverService
+
+    enable_f64()
+    rng = np.random.default_rng(seed)
+    checks: dict[str, bool] = {}
+    obs.enable(out)
+    try:
+        with obs.span("chaos.smoke", seed=seed):
+            grid = (8, 8, 8)
+
+            # -- solver: NaN operand -> typed breakdown, raise policy -----
+            sess = SolverSession(grid=grid, method="cg",
+                                 options=SolverOptions(tol=1e-8, maxiter=200,
+                                                       guards=True))
+            bad = np.asarray(sess.problem.b()).copy()
+            bad[0, 0, 0] = np.nan
+            try:
+                sess.solve(bad)
+                checks["nan_raises"] = False
+            except SolveBreakdown as e:
+                checks["nan_raises"] = (
+                    e.result.status is not None
+                    and int(e.result.status) == 2)
+
+            # -- solver: fallback ladder converges on a clean system ------
+            sess_fb = SolverSession(
+                grid=grid, method="cg_merged",
+                options=SolverOptions(tol=1e-8, maxiter=200,
+                                      on_breakdown="fallback"))
+            r = sess_fb.solve()
+            checks["fallback_clean_converges"] = int(r.status) == 0
+
+            # -- serve: compile failure + preempt-retry + quarantine +
+            #    deadline, one service ------------------------------------
+            inj = ChaosInjector(ChaosPlan(
+                seed=seed, fail_compile_buckets=("bicgstab",),
+                preempt_at=(0,)))
+            svc = SolverService(
+                ServeConfig(max_batch=4, guards=True, max_retries=2,
+                            retry_backoff_s=0.01, retry_seed=seed),
+                injector=inj)
+            ids_ok = [svc.submit(Request(b=rng.standard_normal(grid),
+                                         method="cg", maxiter=200))
+                      for _ in range(3)]
+            ids_cf = [svc.submit(Request(b=rng.standard_normal(grid),
+                                         method="bicgstab", maxiter=200))
+                      for _ in range(2)]
+            poisoned = rng.standard_normal(grid)
+            poisoned[0, 0, 0] = np.nan
+            id_poison = svc.submit(Request(b=poisoned, method="cg",
+                                           maxiter=200))
+            id_dead = svc.submit(Request(b=rng.standard_normal(grid),
+                                         method="cg", maxiter=200,
+                                         deadline_s=0.0))
+            svc.run_until_drained()
+            svc.close()
+            res, rej = svc.results(), svc.rejects()
+            snap = svc.snapshot()
+            checks["compile_fail_rejects"] = all(
+                rej.get(i) is not None
+                and rej[i].reason == "compile_failed" for i in ids_cf)
+            checks["clean_complete"] = all(
+                i in res and res[i].status == "converged" for i in ids_ok)
+            checks["poison_quarantined"] = (
+                id_poison in rej and rej[id_poison].reason == "poisoned")
+            checks["deadline_rejected"] = (
+                id_dead in rej and rej[id_dead].reason == "deadline")
+            checks["retry_not_requeue"] = (snap["retries"] >= 1
+                                           and snap["preemptions"] == 0)
+            checks["nothing_stranded"] = (
+                len(res) + len(rej) == snap["completed"]
+                + snap["service_rejects"] == len(ids_ok) + len(ids_cf) + 2)
+    finally:
+        obs.disable()
+    problems = obs.validate_stream(out)
+    checks["trace_validates"] = not problems
+    return {"ok": all(checks.values()), "seed": seed, "checks": checks,
+            "trace": out, "trace_problems": problems[:5]}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.resilience")
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the seeded chaos suite (the CI gate)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="TRACE_chaos.jsonl",
+                    help="trace artifact path")
+    args = ap.parse_args(argv)
+    if not args.smoke:
+        ap.error("nothing to do: pass --smoke")
+    summary = run_smoke(args.out, seed=args.seed)
+    print(json.dumps(summary, indent=2, sort_keys=True))
+    return 0 if summary["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,13 +10,41 @@ asserting bitwise-identical forward losses.
 
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, Sequence
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding
 
 from repro.distributed.sharding import param_shardings
 from repro.optim.adamw import AdamWState
+
+
+def shrink_mesh(mesh: Mesh, lost: Sequence[int] = (), *,
+                divides: int | None = None) -> Mesh:
+    """The same-named 1-axis mesh over the devices surviving a loss — the
+    serve layer's device-loss resume (repro.resilience): drop the ``lost``
+    device ids, optionally trim to the largest count that divides
+    ``divides`` (the decomposed grid extent — shard_map needs an even
+    split), and rebuild.  Callers then recompile their sessions on the
+    shrunk mesh and replay in-flight work from the WAL.  Multi-axis
+    topologies raise: shrinking a pod×data×model mesh is a layout decision,
+    not a mechanical one — rebuild it explicitly."""
+    if len(mesh.axis_names) != 1:
+        raise ValueError(
+            f"shrink_mesh handles 1-axis meshes (the paper's 1-D z "
+            f"decomposition); got axes {mesh.axis_names} — rebuild the "
+            f"topology explicitly")
+    lost_ids = set(lost)
+    devs = [d for d in mesh.devices.flat if d.id not in lost_ids]
+    if not devs:
+        raise ValueError(f"no devices survive losing {sorted(lost_ids)}")
+    if divides is not None:
+        n = len(devs)
+        while n > 1 and divides % n:
+            n -= 1
+        devs = devs[:n]
+    return Mesh(np.asarray(devs), mesh.axis_names)
 
 
 def reshard_array(x, mesh: Mesh, spec) -> jax.Array:

@@ -114,7 +114,13 @@ def scan_hosts(directory: str, timeout_s: float = 60.0) -> dict:
 
 
 class FailureInjector:
-    """Raises ``SimulatedFailure`` at the configured step (tests/examples)."""
+    """Raises ``SimulatedFailure`` at the configured step (tests/examples).
+
+    This is also the duck-typed surface the serve layer's chaos hooks use
+    (``repro.resilience.inject.ChaosInjector``): ``maybe_fail(step)`` at
+    dispatch points and ``maybe_fail_compile(key)`` at compile points —
+    the base injector never fails compiles, so existing callers are
+    unaffected."""
 
     def __init__(self, fail_at_step: int | None):
         self.fail_at_step = fail_at_step
@@ -126,6 +132,17 @@ class FailureInjector:
             self.fired = True
             raise SimulatedFailure(f"injected failure at step {step}")
 
+    def maybe_fail_compile(self, key) -> None:
+        """Hook point before a compile keyed by ``key`` (a serve bucket,
+        a solve shape, ...).  No-op here; chaos injectors override it."""
+
 
 class SimulatedFailure(RuntimeError):
     pass
+
+
+class DeviceLost(RuntimeError):
+    """A device dropped out of the mesh mid-run (real XLA surfaces this as
+    a backend error; the chaos harness raises it deterministically).  The
+    serve layer reacts by shrinking the mesh (``runtime.elastic``) and
+    replaying in-flight work from the WAL."""

@@ -5,7 +5,8 @@ from repro.serve.cache import CacheEntry, ExecutableCache, session_for
 from repro.serve.metrics import PERCENTILES, ServeMetrics, scan_metrics
 from repro.serve.queue import (BucketKey, DTYPES, QueueFull, Request,
                                RequestQueue)
-from repro.serve.service import ServeConfig, ServeResult, SolverService
+from repro.serve.service import (ServeConfig, ServeReject, ServeResult,
+                                 SolverService)
 from repro.serve.trace import (MIXED_BUCKETS, SMOKE_BUCKETS, TraceBucket,
                                generate_trace, replay)
 
@@ -22,6 +23,7 @@ __all__ = [
     "RequestQueue",
     "ServeConfig",
     "ServeMetrics",
+    "ServeReject",
     "ServeResult",
     "SolverService",
     "TraceBucket",

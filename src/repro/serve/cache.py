@@ -29,15 +29,25 @@ from repro.api import SolverOptions, SolverSession
 from repro.serve.queue import BucketKey
 
 
-def session_for(key: BucketKey, *, pallas: bool = False) -> SolverSession:
-    """Build the ``SolverSession`` a bucket's executable lives in."""
+def session_for(key: BucketKey, *, pallas: bool = False, mesh=None,
+                guards: bool = False) -> SolverSession:
+    """Build the ``SolverSession`` a bucket's executable lives in.
+
+    ``guards`` arms the breakdown guards so every batched dispatch returns
+    honest per-lane ``status`` for the poison quarantine; the recovery
+    policy stays ``"none"`` — the service, not the session, decides what a
+    poisoned lane costs (batched solves never restart the whole batch for
+    one bad lane).  ``mesh`` pins the executable's topology (the elastic
+    device-loss path rebuilds entries on a shrunk mesh)."""
     tol, maxiter, norm_ref, pp = key.solve_params
     opts = SolverOptions(tol=tol, maxiter=maxiter, norm_ref=norm_ref,
                          f64=(key.dtype == "f64"), pallas=pallas,
                          precond=key.precond,
-                         precond_params=dict(pp) if pp else None)
+                         precond_params=dict(pp) if pp else None,
+                         guards=guards,
+                         on_breakdown="none" if guards else "raise")
     return SolverSession(method=key.method, grid=key.grid,
-                         stencil=key.stencil, options=opts)
+                         stencil=key.stencil, options=opts, mesh=mesh)
 
 
 class CacheEntry:
@@ -107,6 +117,16 @@ class ExecutableCache:
             self._counters(k)["evictions"] += 1
             evicted.append(k)
         return evicted
+
+    def clear(self) -> list[BucketKey]:
+        """Drop every resident entry WITHOUT counting evictions — the
+        device-loss path: the executables were compiled against a dead
+        topology, so dropping them is a correctness act, not an LRU
+        capacity decision.  Counters survive (the recompiles that follow
+        are honest misses).  Returns the dropped keys."""
+        keys = list(self._entries)
+        self._entries.clear()
+        return keys
 
     def stats(self) -> dict:
         return {

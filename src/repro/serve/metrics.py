@@ -83,6 +83,20 @@ class ServeMetrics:
     def record_preemption(self, n_requeued: int) -> None:
         self._record("serve.preempt", requeued=n_requeued)
 
+    def record_reject(self, bucket: str, reason: str, *,
+                      rid: int | None = None) -> None:
+        """A service-level reject (compile_failed / deadline / poisoned) —
+        distinct from ``rejected``, which counts admission-time refusals."""
+        self._record("serve.reject", bucket=bucket, reason=reason, id=rid)
+
+    def record_retry(self, bucket: str, attempt: int,
+                     backoff_s: float) -> None:
+        self._record("serve.retry", bucket=bucket, attempt=attempt,
+                     backoff_s=backoff_s)
+
+    def record_device_loss(self, n_lost: int, survivors: int | None) -> None:
+        self._record("serve.device_loss", lost=n_lost, survivors=survivors)
+
     # -- views over the event stream ------------------------------------------
     def events(self) -> list[dict]:
         """The raw schema-tagged event records (what a trace would hold)."""
@@ -98,6 +112,18 @@ class ServeMetrics:
     @property
     def preemptions(self) -> int:
         return len(self._named("serve.preempt"))
+
+    @property
+    def service_rejects(self) -> int:
+        return len(self._named("serve.reject"))
+
+    @property
+    def retries(self) -> int:
+        return len(self._named("serve.retry"))
+
+    @property
+    def device_losses(self) -> int:
+        return len(self._named("serve.device_loss"))
 
     @property
     def requeued(self) -> int:
@@ -132,6 +158,14 @@ class ServeMetrics:
             "preemptions": self.preemptions,
             "requeued": self.requeued,
             "rejected": self.rejected,
+            "service_rejects": self.service_rejects,
+            "rejects_by_reason": {
+                r: sum(1 for e in self._named("serve.reject")
+                       if e["attrs"]["reason"] == r)
+                for r in sorted({e["attrs"]["reason"]
+                                 for e in self._named("serve.reject")})},
+            "retries": self.retries,
+            "device_losses": self.device_losses,
             "qps": self.qps(),
             "queue_depth": queue_depth,
             "queue_depth_max": max(depths) if depths else 0,

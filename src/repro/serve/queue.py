@@ -68,6 +68,13 @@ class Request:
     tol: float = 1e-8
     maxiter: int = 500
     norm_ref: float | None = 1.0
+    #: end-to-end deadline (seconds after admission); a request still
+    #: queued past it is rejected at dispatch time instead of solved
+    #: (``ServeConfig.default_deadline_s`` applies when None).  Not part
+    #: of the bucket key — deadlines don't pin an executable — and not
+    #: persisted in the WAL (a recovered batch re-solves regardless: the
+    #: work is already journalled and paid for).
+    deadline_s: float | None = None
 
     id: int | None = None
     t_submit: float | None = None

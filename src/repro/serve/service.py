@@ -33,6 +33,19 @@ starts over a dead process's WAL re-admits the orphaned batches via
 recovering service may run a different topology than the one that died
 (``runtime/elastic.py::reshard_array`` places them onto the current
 mesh).
+
+Self-healing (repro.resilience, all default-off): a bucket whose compile
+FAILS is marked broken and its requests — queued and future — become
+typed :class:`ServeReject`\\ s instead of stranding forever behind a
+compile that will never land; requests carry deadlines and are rejected
+at dispatch once expired; transient dispatch failures retry in place
+with exponential backoff + seeded jitter before falling back to the WAL
+requeue; with ``guards`` on, lanes whose solve exits breakdown/diverged/
+stagnated are quarantined as rejects (one poisoned RHS must not ship a
+NaN ``x`` nor take the batch down); ``DeviceLost`` shrinks the mesh
+(``runtime/elastic.py::shrink_mesh``), drops every resident executable
+(compiled against the dead topology) and replays the in-flight batch
+from the WAL onto the surviving devices.
 """
 
 from __future__ import annotations
@@ -42,19 +55,24 @@ import json
 import os
 import shutil
 import time
-from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import ThreadPoolExecutor, wait as futures_wait
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.methods import status_name
 from repro.obs import trace as obs
 from repro.runtime import checkpoint as ckpt
-from repro.runtime.elastic import reshard_array
-from repro.runtime.monitor import FailureInjector, SimulatedFailure
+from repro.runtime.elastic import reshard_array, shrink_mesh
+from repro.runtime.monitor import (DeviceLost, FailureInjector,
+                                   SimulatedFailure)
 from repro.serve.cache import CacheEntry, ExecutableCache, session_for
 from repro.serve.metrics import ServeMetrics
 from repro.serve.queue import BucketKey, Request, RequestQueue
+
+#: per-lane statuses the poison quarantine rejects (guards on)
+_POISON_STATUSES = ("breakdown", "diverged", "stagnated")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,7 +80,16 @@ class ServeConfig:
     """Service knobs.  ``max_batch`` is the padded in-flight batch size
     every bucket compiles at (one executable per bucket); ``async_compile``
     runs compiles on a background thread (compile-then-admit);
-    ``recovery_dir`` enables the write-ahead journal."""
+    ``recovery_dir`` enables the write-ahead journal.
+
+    Resilience knobs (all default-off — the default service is bitwise
+    the pre-resilience one): ``guards`` arms per-lane breakdown guards
+    and the poison quarantine; ``default_deadline_s`` applies to requests
+    that declare none; ``max_retries``/``retry_backoff_s``/``retry_jitter``
+    bound the in-place dispatch retry (exponential backoff, jitter drawn
+    from a ``retry_seed``-seeded RNG — chaos runs are reproducible);
+    ``mesh`` pins the bucket executables' topology and enables the
+    device-loss shrink-and-resume path."""
 
     max_batch: int = 4
     cache_capacity: int = 8
@@ -70,6 +97,13 @@ class ServeConfig:
     async_compile: bool = True
     recovery_dir: str | None = None
     pallas: bool = False
+    guards: bool = False
+    default_deadline_s: float | None = None
+    max_retries: int = 0
+    retry_backoff_s: float = 0.05
+    retry_jitter: float = 0.5
+    retry_seed: int = 0
+    mesh: object | None = None
 
 
 @dataclasses.dataclass
@@ -83,6 +117,25 @@ class ServeResult:
     res_norm: float
     latency_s: float
     requeues: int
+    #: the solve's typed exit (``repro.core.methods.STATUS_NAMES``);
+    #: with ``ServeConfig.guards`` on, poisoned lanes never get here —
+    #: they become :class:`ServeReject` instead
+    status: str = "converged"
+
+
+@dataclasses.dataclass
+class ServeReject:
+    """One request the service refused to (or could not) serve, with a
+    machine-readable reason: ``"compile_failed"`` (its bucket's
+    executable never built), ``"deadline"`` (expired in queue) or
+    ``"poisoned"`` (its solve lane exited breakdown/diverged/stagnated
+    under ``ServeConfig.guards``)."""
+
+    id: int
+    bucket: str
+    reason: str
+    detail: str
+    latency_s: float
 
 
 class SolverService:
@@ -94,6 +147,10 @@ class SolverService:
         self.metrics = ServeMetrics()
         self.injector = injector
         self._results: dict[int, ServeResult] = {}
+        self._rejects: dict[int, ServeReject] = {}
+        self._failed: dict[BucketKey, str] = {}   # broken buckets -> detail
+        self._mesh = self.config.mesh             # shrinks on device loss
+        self._retry_rng = np.random.default_rng(self.config.retry_seed)
         self._compiling: dict[BucketKey, object] = {}   # key -> Future
         self._pool = (ThreadPoolExecutor(max_workers=1,
                                          thread_name_prefix="serve-compile")
@@ -117,6 +174,12 @@ class SolverService:
     def results(self) -> dict[int, ServeResult]:
         return self._results
 
+    def rejects(self) -> dict[int, ServeReject]:
+        """Requests the service refused with a typed reason — the client-
+        visible complement of :meth:`results` (every admitted id ends up
+        in exactly one of the two once the queue drains)."""
+        return self._rejects
+
     def run_until_drained(self) -> dict[int, ServeResult]:
         while self.step():
             pass
@@ -134,6 +197,11 @@ class SolverService:
     def step(self) -> bool:
         """One scheduling action; returns False when fully drained."""
         self._admit_ready_compiles(block=False)
+        # a broken bucket (compile failed) rejects everything queued for
+        # it, including requests submitted after the failure — they would
+        # otherwise strand behind a compile that will never land
+        for k in [k for k in self.queue.buckets() if k in self._failed]:
+            self._drain_failed(k)
         keys = self.queue.buckets()
         if not keys:
             if self._compiling:
@@ -158,13 +226,22 @@ class SolverService:
         # there (per-thread parent tracking), labelled by bucket
         with obs.span("serve.compile", bucket=key.short(),
                       batch=self.config.max_batch):
-            session = session_for(key, pallas=self.config.pallas)
+            if self.injector is not None:
+                self.injector.maybe_fail_compile(key)
+            session = session_for(key, pallas=self.config.pallas,
+                                  mesh=self._mesh,
+                                  guards=self.config.guards)
             session.compile_batched(self.config.max_batch)
         return CacheEntry(key, session, self.config.max_batch)
 
     def _start_compile(self, key: BucketKey) -> None:
         if self._pool is None:
-            self.cache.insert(self._build_entry(key))
+            try:
+                entry = self._build_entry(key)
+            except Exception as e:
+                self._fail_bucket(key, e)
+                return
+            self.cache.insert(entry)
             return
         self._compiling[key] = self._pool.submit(self._build_entry, key)
 
@@ -173,14 +250,62 @@ class SolverService:
             return
         done = [k for k, f in self._compiling.items() if f.done()]
         if block and not done:
+            # wait without .result(): a failed compile must become a
+            # per-bucket reject below, not an exception on the scheduler
             oldest = next(iter(self._compiling))
-            self._compiling[oldest].result()
+            futures_wait([self._compiling[oldest]])
             done = [k for k, f in self._compiling.items() if f.done()]
         for k in done:
             fut = self._compiling.pop(k)
-            self.cache.insert(fut.result())
+            try:
+                entry = fut.result()
+            except Exception as e:
+                self._fail_bucket(k, e)
+                continue
+            self.cache.insert(entry)
+
+    def _fail_bucket(self, key: BucketKey, exc: Exception) -> None:
+        """A bucket's executable will never build: mark it broken and
+        convert its queued requests into typed rejects (the pre-resilience
+        behaviour stranded them forever behind the dead compile)."""
+        detail = f"{type(exc).__name__}: {exc}"
+        self._failed[key] = detail
+        obs.event("serve.compile_failed", bucket=key.short(), detail=detail)
+        self._drain_failed(key)
+
+    def _drain_failed(self, key: BucketKey) -> None:
+        detail = self._failed[key]
+        now = time.monotonic()
+        while True:
+            reqs = self.queue.next_batch(key, self.config.max_batch)
+            if not reqs:
+                break
+            for r in reqs:
+                self._reject(r, key, "compile_failed", detail, now)
+        self.metrics.record_queue_depth(self.queue.depth())
 
     # -- dispatch + recovery --------------------------------------------------
+    def _reject(self, r: Request, key: BucketKey, reason: str, detail: str,
+                now: float) -> None:
+        self._rejects[r.id] = ServeReject(
+            id=r.id, bucket=key.short(), reason=reason, detail=detail,
+            latency_s=now - r.t_submit if r.t_submit is not None else 0.0)
+        self.metrics.record_reject(key.short(), reason, rid=r.id)
+
+    def _expire_deadlines(self, key: BucketKey, reqs: list[Request],
+                          now: float) -> list[Request]:
+        live = []
+        for r in reqs:
+            dl = (r.deadline_s if r.deadline_s is not None
+                  else self.config.default_deadline_s)
+            if dl is not None and now - r.t_submit > dl:
+                self._reject(r, key, "deadline",
+                             f"queued {now - r.t_submit:.3f}s > "
+                             f"deadline {dl}s", now)
+            else:
+                live.append(r)
+        return live
+
     def _dispatch(self, key: BucketKey) -> None:
         entry = self.cache.lookup(key)
         assert entry is not None, key
@@ -191,7 +316,10 @@ class SolverService:
             for r in reqs:
                 obs.event("serve.queue_wait", id=r.id, bucket=key.short(),
                           wait_s=t_disp - r.t_submit)
+            reqs = self._expire_deadlines(key, reqs, t_disp)
             self.metrics.record_queue_depth(self.queue.depth())
+            if not reqs:
+                return
             session = entry.session
             dtype = np.dtype(session.problem.dtype)
             bs = np.zeros((entry.batch, *key.grid), dtype)
@@ -200,26 +328,74 @@ class SolverService:
             seq = self._seq
             self._seq += 1
             self._wal_write(seq, key, reqs, bs)
-            try:
-                res = session.solve_batched(jnp.asarray(bs))
-                # "mid-solve": the dispatch is in flight (JAX dispatch is
-                # async); a preemption here loses the computed results
-                if self.injector is not None:
-                    self.injector.maybe_fail(seq)
-                res = jax.block_until_ready(res)
-            except SimulatedFailure:
-                self._recover_inflight(seq, key, reqs)
-                self.metrics.record_preemption(len(reqs))
-                return
+            attempt = 0
+            while True:
+                try:
+                    res = session.solve_batched(jnp.asarray(bs))
+                    # "mid-solve": the dispatch is in flight (JAX dispatch
+                    # is async); a preemption here loses the computed
+                    # results
+                    if self.injector is not None:
+                        self.injector.maybe_fail(seq)
+                    res = jax.block_until_ready(res)
+                    break
+                except DeviceLost as e:
+                    # the executable's topology is gone: shrink, drop every
+                    # resident entry, replay this batch from the WAL — the
+                    # recompile on the surviving devices happens on the
+                    # normal compile-then-admit path
+                    self._on_device_loss(e, key)
+                    self._recover_inflight(seq, key, reqs)
+                    return
+                except SimulatedFailure:
+                    if attempt >= self.config.max_retries:
+                        self._recover_inflight(seq, key, reqs)
+                        self.metrics.record_preemption(len(reqs))
+                        return
+                    attempt += 1
+                    backoff = (self.config.retry_backoff_s
+                               * (2.0 ** (attempt - 1))
+                               * (1.0 + self.config.retry_jitter
+                                  * float(self._retry_rng.random())))
+                    self.metrics.record_retry(key.short(), attempt, backoff)
+                    time.sleep(backoff)
             now = time.monotonic()
             for i, r in enumerate(reqs):
+                st = (status_name(res.status[i])
+                      if res.status is not None else "converged")
+                if self.config.guards and st in _POISON_STATUSES:
+                    # quarantine: one poisoned lane must not ship a NaN x
+                    self._reject(r, key, "poisoned",
+                                 f"lane exited with status={st!r} "
+                                 f"(res_norm={float(res.res_norm[i]):.3e})",
+                                 now)
+                    continue
                 self._results[r.id] = ServeResult(
                     id=r.id, bucket=key.short(), x=np.asarray(res.x[i]),
                     iters=int(res.iters[i]), res_norm=float(res.res_norm[i]),
-                    latency_s=now - r.t_submit, requeues=r.requeues)
+                    latency_s=now - r.t_submit, requeues=r.requeues,
+                    status=st)
                 self.metrics.record_completion(key.short(), now - r.t_submit,
                                                now)
             self._wal_clear(seq)
+
+    def _on_device_loss(self, exc: DeviceLost, key: BucketKey) -> None:
+        lost = tuple(getattr(exc, "lost", ()) or ())
+        if self._mesh is not None:
+            self._mesh = shrink_mesh(self._mesh, lost,
+                                     divides=key.grid[-1])
+            survivors = int(np.prod(self._mesh.devices.shape))
+        else:
+            survivors = None
+        self.metrics.record_device_loss(len(lost), survivors)
+        obs.event("serve.device_loss", bucket=key.short(),
+                  lost=list(lost), survivors=survivors)
+        # in-flight compiles also target the dead topology: let them
+        # finish (the pool thread holds references) and discard them
+        if self._compiling:
+            futures_wait(list(self._compiling.values()))
+            self._compiling.clear()
+        self.cache.clear()
 
     # -- the write-ahead journal ----------------------------------------------
     def _wal_meta_path(self, seq: int) -> str:

@@ -1,0 +1,597 @@
+"""repro.resilience: breakdown-aware solves, recovery policies, the chaos
+harness, and the self-healing serve layer.
+
+Three invariants anchor this file:
+
+* the typed ``SolveResult.status`` is ALWAYS filled — a solve that
+  produced a NaN iterate can never report success (the historical
+  bicgstab silent-wrong bug, regression-tested below with a crafted
+  singular-direction RHS);
+* arming the guards changes nothing on a healthy solve — bit-for-bit
+  the same iterates, and (audited separately in test_audit) zero extra
+  collectives;
+* every injected fault becomes a TYPED outcome — a raised
+  ``SolveBreakdown``, a non-zero status, or a ``ServeReject`` with a
+  machine-readable reason.  Nothing is silently dropped or silently
+  wrong.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import run_multidevice
+
+from repro.api import SolverOptions, SolverSession, fallback_chain, solve
+from repro.core.problems import make_problem
+from repro.obs import trace as obs
+from repro.resilience import (
+    STATUS_BREAKDOWN,
+    STATUS_CONVERGED,
+    STATUS_MAXITER,
+    ChaosInjector,
+    ChaosPlan,
+    SolveBreakdown,
+)
+from repro.serve import Request, ServeConfig, SolverService
+
+pytestmark = pytest.mark.usefixtures("f64")
+
+GRID = (8, 8, 8)
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return make_problem(GRID, "27pt")
+
+
+def _true_res(problem, x) -> float:
+    """||b - Ax|| computed OFFLINE with the plain stencil — independent of
+    whatever recurrence the solver carried."""
+    r = np.asarray(problem.b()) - np.asarray(problem.stencil.matvec(x))
+    return float(np.linalg.norm(r))
+
+
+def _nan_rhs(problem):
+    bad = np.asarray(problem.b()).copy()
+    bad[0, 0, 0] = np.nan
+    return jnp.asarray(bad)
+
+
+def _attempt_spans(path):
+    return [r for r in obs.read_trace(path)
+            if r["kind"] == "span" and r["name"] == "resilience.attempt"]
+
+
+# -----------------------------------------------------------------------------
+# options & registry plumbing
+# -----------------------------------------------------------------------------
+
+def test_options_validation():
+    with pytest.raises(ValueError, match="on_breakdown"):
+        SolverOptions(on_breakdown="retry")
+    with pytest.raises(ValueError, match="residual_replacement"):
+        SolverOptions(residual_replacement=-1)
+    with pytest.raises(ValueError, match="divergence_factor"):
+        SolverOptions(guards=True, divergence_factor=0.5)
+    with pytest.raises(ValueError, match="max_restarts"):
+        SolverOptions(max_restarts=-1)
+
+
+def test_guards_armed_semantics():
+    assert not SolverOptions().guards_armed()
+    assert SolverOptions().guard_spec() is None          # zero-sync fast path
+    assert SolverOptions(guards=True).guards_armed()
+    # a recovery policy arms the guards implicitly — it needs the status
+    assert SolverOptions(on_breakdown="restart").guards_armed()
+    assert SolverOptions(on_breakdown="fallback").guard_spec() is not None
+    assert not SolverOptions(on_breakdown="raise").guards_armed()
+
+
+def test_residual_replacement_requires_refresh_hook(problem):
+    # classic cg computes its residual directly — no refresh hook, and
+    # silently accepting the option would misrepresent what ran
+    with pytest.raises(ValueError, match="residual_replacement"):
+        SolverSession(problem, method="cg",
+                      options=SolverOptions(residual_replacement=8))
+
+
+def test_fallback_chain_walks_variant_ancestry():
+    assert fallback_chain("cg") == ["cg"]
+    assert fallback_chain("cg_merged") == ["cg_merged", "cg"]
+    assert fallback_chain("pbicgstab_merged") == [
+        "pbicgstab_merged", "pbicgstab", "bicgstab"]
+    with pytest.raises(KeyError):
+        fallback_chain("not_a_method")
+
+
+# -----------------------------------------------------------------------------
+# typed status: always on, and free when healthy
+# -----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["cg", "cg_merged", "bicgstab", "pcg"])
+def test_status_converged_always_filled(problem, method):
+    res = solve(problem, method=method, tol=1e-8, maxiter=500)
+    assert res.status is not None
+    assert int(res.status) == STATUS_CONVERGED
+
+
+def test_status_maxiter(problem):
+    res = solve(problem, method="cg", tol=1e-12, maxiter=2)
+    assert int(res.status) == STATUS_MAXITER
+
+
+def test_nan_rhs_is_breakdown_even_without_guards(problem):
+    # the always-on post-loop check: no guards, no recovery policy — a
+    # NaN-poisoned operand still must not report success
+    res = SolverSession(problem, method="cg",
+                        options=SolverOptions(tol=1e-8, maxiter=50)
+                        ).solve(_nan_rhs(problem))
+    assert int(res.status) == STATUS_BREAKDOWN
+
+
+def test_guarded_solve_is_bitwise_free_when_healthy(problem):
+    plain = SolverSession(problem, method="cg_merged",
+                          options=SolverOptions(tol=1e-8, maxiter=200)
+                          ).solve()
+    guarded = SolverSession(problem, method="cg_merged",
+                            options=SolverOptions(tol=1e-8, maxiter=200,
+                                                  guards=True,
+                                                  on_breakdown="none")
+                            ).solve()
+    assert int(plain.iters) == int(guarded.iters)
+    assert float(plain.res_norm) == float(guarded.res_norm)
+    np.testing.assert_array_equal(np.asarray(plain.x), np.asarray(guarded.x))
+    assert int(guarded.status) == STATUS_CONVERGED
+
+
+# -----------------------------------------------------------------------------
+# the bicgstab silent-wrong regression (crafted singular direction)
+# -----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["bicgstab", "bicgstab_merged"])
+@pytest.mark.parametrize("guards", [False, True])
+def test_bicgstab_singular_direction_never_silent(problem, method, guards):
+    """A' = P·A with P zeroing the z=0 plane is singular; an RHS living
+    entirely in that plane makes (r̂, A'p) = 0 at k=0, so α = ρ/0 poisons
+    the iterate.  Historically the recurrence res_norm kept reporting the
+    stale pre-breakdown value — a NaN x shipped as 'converged'.  Now the
+    exit is typed breakdown, guards or not."""
+    st = problem.stencil
+
+    def masked_mv(xp):
+        return st.matvec_padded(xp).at[:, :, 0].set(0.0)
+
+    b = np.zeros(GRID)
+    b[:, :, 0] = 1.0
+    res = SolverSession(
+        problem, method=method,
+        options=SolverOptions(tol=1e-8, maxiter=50, matvec_padded=masked_mv,
+                              guards=guards, on_breakdown="none"),
+    ).solve(jnp.asarray(b))
+    assert int(res.status) == STATUS_BREAKDOWN
+    assert int(res.status) != STATUS_CONVERGED
+
+
+@pytest.mark.parametrize("method", ["cg_nb", "cg_merged"])
+def test_negative_curvature_guard_exits_early(problem, method):
+    """Shift A past the RHS's Rayleigh quotient: pᵀA'p < 0 at k=0.  The
+    guarded loop must exit immediately (last finite iterate, typed
+    breakdown); the unguarded loop grinds to maxiter but still must not
+    claim convergence."""
+    st = problem.stencil
+    rng = np.random.default_rng(0)
+    b = rng.standard_normal(GRID)
+    bj = jnp.asarray(b)
+    Ab = np.asarray(st.matvec(bj))
+    shift = float((b * Ab).sum() / (b * b).sum()) + 5.0
+
+    def indef_mv(xp):
+        return st.matvec_padded(xp) - shift * xp[1:-1, 1:-1, 1:-1]
+
+    def run(guards):
+        return SolverSession(
+            problem, method=method,
+            options=SolverOptions(tol=1e-8, maxiter=60,
+                                  matvec_padded=indef_mv, guards=guards,
+                                  on_breakdown="none")).solve(bj)
+
+    guarded = run(True)
+    assert int(guarded.status) == STATUS_BREAKDOWN
+    assert int(guarded.iters) == 0                 # fired on the init state
+    assert bool(np.isfinite(np.asarray(guarded.x)).all())
+    plain = run(False)
+    assert int(plain.status) != STATUS_CONVERGED
+
+
+# -----------------------------------------------------------------------------
+# recovery policies
+# -----------------------------------------------------------------------------
+
+def test_raise_policy(problem):
+    sess = SolverSession(problem, method="cg",
+                         options=SolverOptions(tol=1e-8, maxiter=50,
+                                               guards=True))
+    with pytest.raises(SolveBreakdown) as exc:
+        sess.solve(_nan_rhs(problem))
+    assert int(exc.value.result.status) == STATUS_BREAKDOWN
+    assert "cg" in str(exc.value)
+
+
+def test_restart_recovers_from_transient_breakdown(problem, tmp_path):
+    """Fail the first attempt (finite garbage iterate, typed breakdown);
+    the restart policy must re-enter from that iterate and converge."""
+    sess = SolverSession(problem, method="cg",
+                         options=SolverOptions(tol=1e-8, maxiter=300,
+                                               on_breakdown="restart",
+                                               max_restarts=3))
+    real, calls = sess._solve_once, []
+
+    def flaky(b=None, x0=None):
+        calls.append(None if x0 is None else np.asarray(x0).ravel()[0])
+        res = real(b, x0)
+        if len(calls) == 1:
+            return res._replace(x=jnp.full_like(res.x, 0.5),
+                                status=jnp.asarray(STATUS_BREAKDOWN,
+                                                   jnp.int32))
+        return res
+
+    sess._solve_once = flaky
+    path = str(tmp_path / "restart.jsonl")
+    obs.enable(path)
+    try:
+        res = sess.solve()
+    finally:
+        obs.disable()
+    assert int(res.status) == STATUS_CONVERGED
+    assert len(calls) == 2
+    assert calls[1] == 0.5          # restarted FROM the last finite iterate
+    spans = _attempt_spans(path)
+    assert len(spans) == 1
+    assert spans[0]["attrs"]["policy"] == "restart"
+    assert spans[0]["attrs"]["from_status"] == "breakdown"
+
+
+def test_restart_exhausts_budget_with_typed_status(problem, tmp_path):
+    sess = SolverSession(problem, method="cg",
+                         options=SolverOptions(tol=1e-8, maxiter=50,
+                                               on_breakdown="restart",
+                                               max_restarts=2))
+    path = str(tmp_path / "exhaust.jsonl")
+    obs.enable(path)
+    try:
+        res = sess.solve(_nan_rhs(problem))     # unfixable: b itself is NaN
+    finally:
+        obs.disable()
+    assert int(res.status) == STATUS_BREAKDOWN  # typed, never an exception
+    assert len(_attempt_spans(path)) == 2       # the whole budget was spent
+
+
+def test_fallback_ladder_reaches_classic(problem, tmp_path):
+    """Stamp every primary attempt as breakdown; the ladder must run the
+    classical ancestor for real and return its (bitwise classic) answer."""
+    sess = SolverSession(problem, method="cg_merged",
+                         options=SolverOptions(tol=1e-8, maxiter=300,
+                                               on_breakdown="fallback"))
+    real = sess._solve_once
+    sess._solve_once = lambda b=None, x0=None: real(b, x0)._replace(
+        status=jnp.asarray(STATUS_BREAKDOWN, jnp.int32))
+    path = str(tmp_path / "fallback.jsonl")
+    obs.enable(path)
+    try:
+        res = sess.solve()
+    finally:
+        obs.disable()
+    assert int(res.status) == STATUS_CONVERGED
+    spans = _attempt_spans(path)
+    assert [s["attrs"]["method"] for s in spans] == ["cg"]
+    assert spans[0]["attrs"]["policy"] == "fallback"
+    ref = solve(problem, method="cg", tol=1e-8, maxiter=300)
+    np.testing.assert_array_equal(np.asarray(res.x), np.asarray(ref.x))
+
+
+def test_fallback_unfixable_returns_typed_status(problem):
+    res = SolverSession(problem, method="cg_merged",
+                        options=SolverOptions(tol=1e-8, maxiter=50,
+                                              on_breakdown="fallback")
+                        ).solve(_nan_rhs(problem))
+    assert int(res.status) == STATUS_BREAKDOWN
+
+
+def test_fallback_ladder_retreats_overrides_first(problem):
+    """With a custom SpMV the suspect is the override, not the method: the
+    first rung re-runs the SAME method on defaults, then walks ancestry.
+    Ladder rungs never recurse (on_breakdown='none') and drop the options
+    their method can't honour (residual_replacement without a refresh
+    hook)."""
+    sess = SolverSession(
+        problem, method="cg_merged",
+        options=SolverOptions(tol=1e-8, maxiter=50, on_breakdown="fallback",
+                              matvec_padded=problem.stencil.matvec_padded,
+                              residual_replacement=8))
+    ladder = sess._fallback_ladder()
+    assert [name for name, _ in ladder] == ["cg_merged", "cg"]
+    for _, rung in ladder:
+        assert rung.options.on_breakdown == "none"
+        assert rung.options.guards
+        assert rung.options.matvec_padded is None
+    assert ladder[0][1].options.residual_replacement == 8   # has refresh
+    assert ladder[1][1].options.residual_replacement == 0   # cg has none
+
+
+# -----------------------------------------------------------------------------
+# residual replacement: convergence preserved, drift bounded, cost priced
+# -----------------------------------------------------------------------------
+
+def test_residual_replacement_converges(problem):
+    res = SolverSession(problem, method="cg_merged",
+                        options=SolverOptions(tol=1e-8, maxiter=300,
+                                              residual_replacement=8)
+                        ).solve()
+    assert int(res.status) == STATUS_CONVERGED
+    assert _true_res(problem, res.x) < 1e-6
+
+
+@pytest.fixture(scope="module")
+def drift64():
+    prob = make_problem((64, 64, 64), "27pt")
+    ref = solve(prob, method="cg", tol=1e-9, maxiter=400)
+    assert int(ref.status) == STATUS_CONVERGED
+    return prob, _true_res(prob, ref.x)
+
+
+@pytest.mark.parametrize("variant", ["cg_merged", "cg_pipe"])
+def test_drift_regression_64cube(drift64, variant):
+    """The acceptance bar: at 64³ the replaced merged/pipelined variants'
+    TRUE residual (recomputed offline, not the carried recurrence scalar)
+    lands within 10x of the classical CG floor."""
+    prob, floor = drift64
+    res = SolverSession(prob, method=variant,
+                        options=SolverOptions(tol=1e-9, maxiter=400,
+                                              residual_replacement=16)
+                        ).solve()
+    assert int(res.status) == STATUS_CONVERGED
+    assert _true_res(prob, res.x) <= 10 * floor
+
+
+def test_scaling_model_prices_residual_replacement():
+    from benchmarks.scaling_model import iteration_breakdown
+    kw = dict(nbar=27, local_grid=(64, 64, 64), chips=64)
+    base = iteration_breakdown("cg_merged", **kw)
+    rr = iteration_breakdown("cg_merged", refresh_every=10, **kw)
+    assert base["t_rr"] == 0.0
+    assert rr["t_rr"] > 0.0
+    assert rr["total"] == pytest.approx(base["total"] + rr["t_rr"])
+    # a method with no refresh hook prices as zero regardless
+    assert iteration_breakdown("cg", refresh_every=10, **kw)["t_rr"] == 0.0
+
+
+# -----------------------------------------------------------------------------
+# serve: chaos matrix
+# -----------------------------------------------------------------------------
+
+def _submit(svc, rng, n, method="cg", **kw):
+    return [svc.submit(Request(b=rng.standard_normal(GRID), method=method,
+                               maxiter=200, **kw)) for _ in range(n)]
+
+
+@pytest.mark.parametrize("async_compile", [True, False])
+def test_compile_failure_becomes_typed_rejects(async_compile):
+    """The satellite regression: a bucket whose compile fails must turn
+    its queued requests into per-request typed rejects — on BOTH the
+    async compile-then-admit path (which used to strand them silently)
+    and the sync path — while other buckets keep completing."""
+    rng = np.random.default_rng(0)
+    inj = ChaosInjector(ChaosPlan(seed=0, fail_compile_buckets=("bicgstab",)))
+    svc = SolverService(ServeConfig(max_batch=4, guards=True,
+                                    async_compile=async_compile),
+                        injector=inj)
+    ids_ok = _submit(svc, rng, 3, method="cg")
+    ids_cf = _submit(svc, rng, 2, method="bicgstab")
+    svc.run_until_drained()
+    svc.close()
+    res, rej = svc.results(), svc.rejects()
+    assert all(i in res and res[i].status == "converged" for i in ids_ok)
+    assert all(i in rej and rej[i].reason == "compile_failed"
+               for i in ids_cf)
+    assert len(res) + len(rej) == len(ids_ok) + len(ids_cf)  # zero stranded
+    snap = svc.snapshot()
+    assert snap["rejects_by_reason"] == {"compile_failed": 2}
+
+
+def test_poison_quarantine_spares_clean_lanes(problem):
+    rng = np.random.default_rng(1)
+    svc = SolverService(ServeConfig(max_batch=4, guards=True))
+    bs = {}
+    ids_ok = []
+    for _ in range(3):
+        b = rng.standard_normal(GRID)
+        rid = svc.submit(Request(b=b, method="cg", maxiter=200))
+        ids_ok.append(rid)
+        bs[rid] = b
+    poisoned = rng.standard_normal(GRID)
+    poisoned[0, 0, 0] = np.nan
+    id_poison = svc.submit(Request(b=poisoned, method="cg", maxiter=200))
+    svc.run_until_drained()
+    svc.close()
+    res, rej = svc.results(), svc.rejects()
+    # the poisoned lane rode the SAME padded batch as the clean ones —
+    # it is quarantined, they converge
+    assert id_poison in rej and rej[id_poison].reason == "poisoned"
+    assert all(i in res and res[i].status == "converged" for i in ids_ok)
+    # no silent wrong answers: cross-check the shipped x against the TRUE
+    # residual, recomputed offline with the plain stencil
+    for rid in ids_ok:
+        r = bs[rid] - np.asarray(problem.stencil.matvec(jnp.asarray(res[rid].x)))
+        assert float(np.linalg.norm(r)) < 1e-5
+
+
+def test_halo_delay_slows_but_never_hangs():
+    rng = np.random.default_rng(6)
+    inj = ChaosInjector(ChaosPlan(seed=0, halo_delay_s=0.02))
+    svc = SolverService(ServeConfig(max_batch=2, guards=True), injector=inj)
+    ids = _submit(svc, rng, 3, method="cg")
+    svc.run_until_drained()
+    svc.close()
+    res = svc.results()
+    assert all(i in res and res[i].status == "converged" for i in ids)
+
+
+def test_poison_needs_guards_off_means_status_only():
+    # guards off: no quarantine — but the typed status still ships, so the
+    # caller can see the lane is poisoned (nothing is silently wrong)
+    rng = np.random.default_rng(2)
+    svc = SolverService(ServeConfig(max_batch=2, guards=False))
+    poisoned = rng.standard_normal(GRID)
+    poisoned[0, 0, 0] = np.nan
+    rid = svc.submit(Request(b=poisoned, method="cg", maxiter=100))
+    svc.run_until_drained()
+    svc.close()
+    res = svc.results()
+    assert rid in res and res[rid].status == "breakdown"
+
+
+def test_deadline_rejects_expired_request():
+    rng = np.random.default_rng(3)
+    svc = SolverService(ServeConfig(max_batch=2, guards=True))
+    id_dead = svc.submit(Request(b=rng.standard_normal(GRID), method="cg",
+                                 maxiter=200, deadline_s=0.0))
+    id_ok = svc.submit(Request(b=rng.standard_normal(GRID), method="cg",
+                               maxiter=200))
+    svc.run_until_drained()
+    svc.close()
+    assert svc.rejects()[id_dead].reason == "deadline"
+    assert svc.results()[id_ok].status == "converged"
+
+
+def test_retry_absorbs_preemption_in_place():
+    rng = np.random.default_rng(4)
+    inj = ChaosInjector(ChaosPlan(seed=0, preempt_at=(0,)))
+    svc = SolverService(ServeConfig(max_batch=4, guards=True, max_retries=2,
+                                    retry_backoff_s=0.01, retry_seed=0),
+                        injector=inj)
+    ids = _submit(svc, rng, 3, method="cg")
+    svc.run_until_drained()
+    svc.close()
+    snap = svc.snapshot()
+    assert all(i in svc.results() for i in ids)
+    assert snap["retries"] >= 1
+    assert snap["preemptions"] == 0     # absorbed, never hit the requeue
+
+
+def test_retry_budget_exhausted_falls_back_to_requeue():
+    rng = np.random.default_rng(5)
+    inj = ChaosInjector(ChaosPlan(seed=0, preempt_at=(0,)))
+    svc = SolverService(ServeConfig(max_batch=4, guards=True, max_retries=0),
+                        injector=inj)
+    ids = _submit(svc, rng, 3, method="cg")
+    svc.run_until_drained()
+    svc.close()
+    snap = svc.snapshot()
+    assert all(i in svc.results() for i in ids)   # requeued, then completed
+    assert snap["preemptions"] == 1
+    assert snap["retries"] == 0
+
+
+def test_chaos_smoke_suite(tmp_path):
+    """The ``make chaos-smoke`` entry point end-to-end: every fault class,
+    one seeded run, a validating trace artifact."""
+    from repro.resilience.__main__ import run_smoke
+    summary = run_smoke(str(tmp_path / "TRACE_chaos.jsonl"), seed=0)
+    assert summary["ok"], summary["checks"]
+
+
+# -----------------------------------------------------------------------------
+# multi-device: guards under shard_map, device loss, elastic shrink
+# -----------------------------------------------------------------------------
+
+SCRIPT_GUARDED_SHARDMAP = r"""
+import json
+import numpy as np
+import jax.numpy as jnp
+from repro.core.problems import enable_f64, make_problem
+from repro.api import SolverOptions, SolverSession
+from repro.core.compat import make_mesh
+enable_f64()
+prob = make_problem((8, 8, 8), "27pt")
+mesh = make_mesh((8,), ("cells",))
+opts = SolverOptions(tol=1e-8, maxiter=200, guards=True, on_breakdown="none",
+                     residual_replacement=8)
+dist = SolverSession(prob, method="cg_merged", options=opts, mesh=mesh).solve()
+loc = SolverSession(prob, method="cg_merged", options=opts).solve()
+bad = np.asarray(prob.b()).copy(); bad[0, 0, 0] = np.nan
+nres = SolverSession(prob, method="cg_merged", options=opts,
+                     mesh=mesh).solve(jnp.asarray(bad))
+print(json.dumps({
+    "status_dist": int(dist.status), "status_local": int(loc.status),
+    "iters_equal": int(dist.iters) == int(loc.iters),
+    "x_equal": bool((np.asarray(dist.x) == np.asarray(loc.x)).all()),
+    "nan_status": int(nres.status)}))
+"""
+
+
+def test_guards_and_refresh_under_shardmap():
+    """Guards + residual replacement on an 8-device mesh: the guarded
+    distributed solve matches the guarded local one bitwise, and a
+    poisoned operand exits typed breakdown on every shard (the guard
+    scalars are post-psum replicated — no shard divergence)."""
+    out = run_multidevice(SCRIPT_GUARDED_SHARDMAP)
+    assert out["status_dist"] == 0 and out["status_local"] == 0
+    assert out["iters_equal"] and out["x_equal"]
+    assert out["nan_status"] == 2
+
+
+SCRIPT_DEVICE_LOSS = r"""
+import json
+import numpy as np
+from repro.core.problems import enable_f64
+from repro.core.compat import make_mesh
+from repro.resilience import ChaosInjector, ChaosPlan
+from repro.runtime.elastic import shrink_mesh
+from repro.serve import Request, ServeConfig, SolverService
+enable_f64()
+out = {}
+
+# -- shrink_mesh unit behaviour -----------------------------------------------
+mesh = make_mesh((8,), ("cells",))
+ids = [d.id for d in mesh.devices.flat]
+m2 = shrink_mesh(mesh, lost=ids[6:], divides=8)   # 6 survive -> trim to 4
+out["shrunk_to"] = int(np.prod(m2.devices.shape))
+out["axis_kept"] = list(m2.axis_names) == ["cells"]
+try:
+    shrink_mesh(make_mesh((4, 2), ("data", "model")), lost=())
+    out["multiaxis_raises"] = False
+except ValueError:
+    out["multiaxis_raises"] = True
+
+# -- device loss mid-stream: shrink, recompile, finish the work ---------------
+rng = np.random.default_rng(0)
+inj = ChaosInjector(ChaosPlan(seed=0, device_loss_at=(0,),
+                              lose_devices=(6, 7)))
+svc = SolverService(ServeConfig(max_batch=2, guards=True, mesh=mesh),
+                    injector=inj)
+rids = [svc.submit(Request(b=rng.standard_normal((8, 8, 8)), method="cg",
+                           maxiter=200)) for _ in range(4)]
+svc.run_until_drained()
+svc.close()
+res, snap = svc.results(), svc.snapshot()
+out["all_converged"] = all(
+    i in res and res[i].status == "converged" for i in rids)
+out["device_losses"] = snap["device_losses"]
+out["rejected"] = snap["service_rejects"]
+out["mesh_after"] = int(np.prod(svc._mesh.devices.shape))
+print(json.dumps(out))
+"""
+
+
+def test_device_loss_shrinks_mesh_and_resumes():
+    """Losing 2 of 8 devices mid-dispatch: the service shrinks the mesh to
+    the largest extent-dividing survivor count (4), drops every cached
+    executable for the dead topology, requeues the in-flight batch, and
+    completes all work on the shrunken mesh — zero rejects, zero drops."""
+    out = run_multidevice(SCRIPT_DEVICE_LOSS)
+    assert out["shrunk_to"] == 4 and out["axis_kept"]
+    assert out["multiaxis_raises"]
+    assert out["all_converged"]
+    assert out["device_losses"] == 1
+    assert out["rejected"] == 0
+    assert out["mesh_after"] == 4
