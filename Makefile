@@ -6,7 +6,8 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast verify smoke serve-smoke obs-smoke chaos-smoke \
-	bench bench-kernels bench-precond examples lint audit audit-write
+	bench bench-kernels bench-precond autotune-smoke examples lint \
+	audit audit-write
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -50,6 +51,12 @@ bench-precond:
 # merged vs pipelined vs fused kernels); writes BENCH_kernels.json
 bench-kernels:
 	$(PYTHON) -m benchmarks.bench_kernels
+
+# bounded autotuner sweep over the two CI configs (16³ + 32³, 7pt): tunes
+# bz/br and the Pallas-vs-XLA crossover, persists the winners in the tune
+# cache (CI points REPRO_AUTOTUNE_CACHE at a workspace file and uploads it)
+autotune-smoke:
+	$(PYTHON) -m repro.kernels.autotune --smoke --repeats 1
 
 # replay the fixed heterogeneous trace through repro.serve, write
 # BENCH_serve.json, then re-assert its SLO gate (zero drops, one compile

@@ -113,6 +113,25 @@ KERNEL_TABLE: tuple[KernelSpec, ...] = (
     KernelSpec("flash_attention", "flash_attention", "flash_attention_ref",
                _flash_bytes(), block_z=256,
                divides=(1024, 2048, 4096)),
+    # --- PR 10: the full fused-body family ----------------------------------
+    KernelSpec("spmv_dots3", "spmv_dot", "stencil_spmv_dots3_ref",
+               _slab_bytes(windows=1, plains=1, outs=1, accs=3)),
+    KernelSpec("fused_dots", "fused_bodies", "fused_dots_ref",
+               _row_bytes(3, accs=3), block_z=256, divides=PROD_ROWS),
+    KernelSpec("pipe_body", "fused_bodies", "fused_pipe_body_ref",
+               _row_bytes(13, br=64), block_z=64, divides=PROD_ROWS),
+    KernelSpec("pcg_body", "fused_bodies", "fused_pcg_body_ref",
+               _row_bytes(10, br=128), block_z=128, divides=PROD_ROWS),
+    KernelSpec("ppipe_body", "fused_bodies", "fused_ppipe_body_ref",
+               _row_bytes(18, br=64), block_z=64, divides=PROD_ROWS),
+    KernelSpec("bicgstab_update1", "fused_bodies", "bicgstab_update1_ref",
+               _row_bytes(9, br=128), block_z=128, divides=PROD_ROWS),
+    KernelSpec("bicgstab_spmv_dots", "bicgstab_fused",
+               "bicgstab_spmv_dots_ref",
+               _slab_bytes(windows=1, plains=6, outs=3, accs=9)),
+    KernelSpec("bicgstab_spmv_update", "bicgstab_fused",
+               "bicgstab_spmv_update_ref",
+               _slab_bytes(windows=1, plains=6, outs=4)),
 )
 
 #: public names in kernels.ops that deliberately have no table row
@@ -211,4 +230,18 @@ def check_kernels(table: tuple[KernelSpec, ...] | None = None, *,
                     "lint_kernels", f"kernel:{name}", "table_row",
                     expected="a KERNEL_TABLE row per public kernel wrapper",
                     actual="wrapper not covered"))
+        # every fused hook a method declares must itself be a tabled kernel —
+        # an untabled (hence oracle-less, VMEM-unchecked) kernel reached via
+        # the fused path would dodge all the checks above
+        from repro.core.methods import METHODS
+        for mname, mdef in sorted(METHODS.items()):
+            for hook in mdef.fused_kernels:
+                if hook not in tabled:
+                    out.append(Violation(
+                        "lint_kernels", f"kernel:{hook}", "fused_coverage",
+                        expected=f"a KERNEL_TABLE row for fused hook "
+                                 f"{hook!r} (declared by {mname!r})",
+                        actual="hook not tabled",
+                        detail="fused-path kernels take the same "
+                               "VMEM/oracle/test checks as classic ones"))
     return out

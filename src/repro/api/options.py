@@ -51,6 +51,11 @@ class SolverOptions:
                   the paper-faithful 1-D z split), ``"local"``, ``"1d"``,
                   ``"2d"`` (data×model mesh), ``"3d"`` (pod×data×model).
     pallas:       back the local stencil SpMV with the Pallas kernel.
+                  ``None`` = "auto": ``kernels.autotune`` decides per
+                  (stencil, grid, dtype, device_kind) — the persisted tune
+                  cache when one exists, else the default table (TPU and
+                  grid volume >= 24³).  Resolved to a concrete bool at
+                  session construction.
     norm_ref:     residual normalisation; ``1.0`` = the paper's absolute
                   HPCCG criterion, ``None`` = relative to ``||b||``.
     dot:          override the reduction used by the solver (local path
@@ -136,7 +141,7 @@ class SolverOptions:
     maxiter: int = 600
     f64: bool = True
     layout: str = "auto"
-    pallas: bool = False
+    pallas: bool | None = False
     norm_ref: float | None = 1.0
     dot: Callable | None = None
     halo_mode: str = "auto"

@@ -201,8 +201,34 @@ def method_field_diff(spec: SolverSpec, mdef: MethodDef) -> list[FieldDiff]:
     ]
 
 
+def fused_capability_diff(spec: SolverSpec, mdef: MethodDef) -> list[FieldDiff]:
+    """The ``fused_kernels`` capability must be *executable*, not just
+    declared: a non-empty tuple requires the MethodDef to carry a fused
+    body (``fused_step``/``fused_init``), and every named kernel must be a
+    real ``PallasOp`` hook.  Before this check a capability typo silently
+    routed ``pallas=True`` to the unfused path (``has_fused_body`` was
+    true, the hook lookup failed only at trace time — or never, if the
+    name drifted from the hook it meant)."""
+    if not spec.fused_kernels:
+        return []
+    from repro.kernels.pallas_op import PallasOp
+
+    diffs = []
+    if mdef.fused_step is None or mdef.fused_init is None:
+        diffs.append(FieldDiff(
+            spec.name, "fused_kernels", spec.fused_kernels,
+            "() — MethodDef has no fused body (fused_step/fused_init)"))
+    missing = tuple(k for k in spec.fused_kernels
+                    if not callable(getattr(PallasOp, k, None)))
+    if missing:
+        diffs.append(FieldDiff(
+            spec.name, "fused_kernels", spec.fused_kernels,
+            f"PallasOp hooks — {missing} not found on PallasOp"))
+    return diffs
+
+
 def _validate_against_method(spec: SolverSpec, mdef: MethodDef) -> None:
-    diffs = method_field_diff(spec, mdef)
+    diffs = method_field_diff(spec, mdef) + fused_capability_diff(spec, mdef)
     if diffs:
         raise RegistryConsistencyError(
             f"{spec.name!r} drifted from its MethodDef:\n"
@@ -337,7 +363,7 @@ register_solver(SolverSpec(
     name="cg_merged", fn=_solvers.cg_merged,
     reduction_hides=("none",), spmvs_per_iter=1, spd_required=True,
     variant_of="cg", reduce_hide="merged",
-    fused_kernels=("fused_cg_body", "spmv_dots"),
+    fused_kernels=("cg_body", "spmv_dots"),
     description="Chronopoulos–Gear CG: all dots in ONE stacked psum "
                 "(Saad recurrence for p·Ap)"))
 
@@ -345,6 +371,7 @@ register_solver(SolverSpec(
     name="cg_pipe", fn=_solvers.cg_pipe,
     reduction_hides=("pipe",), spmvs_per_iter=1, spd_required=True,
     variant_of="cg", reduce_hide="pipelined",
+    fused_kernels=("spmv_dots3", "pipe_body"),
     description="Ghysels–Vanroose pipelined CG: the ONE stacked psum "
                 "overlaps the SpMV"))
 
@@ -353,6 +380,7 @@ register_solver(SolverSpec(
     reduction_hides=("none",), spmvs_per_iter=1, spd_required=True,
     variant_of="pcg", reduce_hide="merged",
     accepts_precond=True, precond_applies_per_iter=1,
+    fused_kernels=("pcg_body", "spmv_dots3"),
     description="merged-reduction PCG (Chronopoulos–Gear with M)"))
 
 register_solver(SolverSpec(
@@ -360,12 +388,15 @@ register_solver(SolverSpec(
     reduction_hides=("pipe",), spmvs_per_iter=1, spd_required=True,
     variant_of="pcg", reduce_hide="pipelined",
     accepts_precond=True, precond_applies_per_iter=1,
+    fused_kernels=("fused_dots", "ppipe_body"),
     description="pipelined PCG: the stacked psum overlaps M-apply + SpMV"))
 
 register_solver(SolverSpec(
     name="bicgstab_merged", fn=_solvers.bicgstab_merged,
     reduction_hides=("none",), spmvs_per_iter=2,
     variant_of="bicgstab", reduce_hide="merged",
+    fused_kernels=("bicgstab_spmv_dots", "bicgstab_update1",
+                   "bicgstab_spmv_update"),
     description="single-reduction BiCGStab: nine dots, ONE stacked psum "
                 "(Cools–Vanroose recurrences)"))
 
@@ -374,6 +405,8 @@ register_solver(SolverSpec(
     reduction_hides=("none",), spmvs_per_iter=2,
     variant_of="pbicgstab", reduce_hide="merged",
     accepts_precond=True, precond_applies_per_iter=2,
+    fused_kernels=("bicgstab_spmv_dots", "bicgstab_update1",
+                   "bicgstab_spmv_update"),
     description="right-preconditioned single-reduction BiCGStab "
                 "(merged core on A∘M⁻¹, true-residual stopping)"))
 

@@ -85,6 +85,15 @@ class SolverSession:
                     f"f64={have == jnp.dtype(jnp.float64)} (the problem's "
                     f"dtype is authoritative) or rebuild the problem.")
         self.problem = problem
+        if self.options.pallas is None:
+            # pallas="auto": the kernels/autotune cache (or its documented
+            # default table) decides the Pallas-vs-XLA routing for this
+            # (stencil, grid, dtype, device_kind); downstream code only
+            # ever sees a concrete bool.
+            from repro.kernels import autotune
+            dec = autotune.resolve(problem.stencil.name, problem.shape,
+                                   problem.dtype)
+            self.options = self.options.replace(pallas=dec.use_pallas)
         # solve-lifecycle spans (repro.obs): resolve -> precond.setup ->
         # compile (in _executable) -> execute (in solve/solve_batched)
         with obs.span("resolve", method=method, layout=self.options.layout,
@@ -180,9 +189,13 @@ class SolverSession:
         shard_map backend (``PallasOp`` supplies halos/psums there).
         Single-RHS solves only: the batched path always runs the jnp body
         (with the Pallas SpMV under ``pallas=True``) — vmapping the fused
-        kernels is not supported."""
+        kernels is not supported.  Preconditioned methods stay on the
+        fused path too (PR 10): the bound preconditioner apply composes
+        inside the fused body (its own Pallas kernels when
+        ``use_pallas``), so ``pcg_merged + chebyshev`` runs end-to-end on
+        the 2-HBM-pass path."""
         return (self.options.pallas and self.spec.has_fused_body
-                and self.precond is None
+                and (self.precond is None or self.spec.accepts_precond)
                 and self.options.matvec_padded is None
                 and self.options.dot is None)
 
@@ -201,9 +214,11 @@ class SolverSession:
                 from repro.kernels.pallas_op import PallasOp
                 A = PallasOp(LocalOp(self.problem.stencil))
                 mdef = self.spec.method_def
+                M = (None if self.precond is None
+                     else self.precond.bind(A))
 
                 def run_fused(b, x0):
-                    ops = Ops(A, b, norm_ref=opts.norm_ref)
+                    ops = Ops(A, b, M=M, norm_ref=opts.norm_ref)
                     return run_method(mdef, ops, x0, tol=opts.tol,
                                       maxiter=opts.maxiter, fused=True,
                                       telemetry=opts.telemetry_rows(),
@@ -217,7 +232,8 @@ class SolverSession:
                 self.problem, self.method, self.backend.mesh,
                 dims_map=opts.dims_map, tol=opts.tol, maxiter=opts.maxiter,
                 norm_ref=opts.norm_ref, halo_mode=self.halo_mode,
-                pallas_fused=True, telemetry=opts.telemetry_rows(),
+                pallas_fused=True, precond=self.precond,
+                telemetry=opts.telemetry_rows(),
                 guard_spec=opts.guard_spec(),
                 refresh_every=opts.residual_replacement)
             return jax.jit(fn, **jit_kw)

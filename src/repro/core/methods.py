@@ -218,12 +218,15 @@ OPS_PROTOCOL = frozenset({
 
 #: what a MethodDef may touch on the operator itself (``ops.A`` — the
 #: LocalOp/DistributedOp/PallasOp protocol).  ``base`` unwraps a PallasOp to
-#: its inner operator; ``spmv_dots``/``cg_body`` are the fused-kernel hooks
-#: the ``fused_step`` bodies target.
+#: its inner operator; everything from ``spmv_dots`` on is a fused-kernel
+#: hook a ``fused_step`` body targets (``PallasOp`` supplies them — one per
+#: single-pass Pallas kernel of the reduction-hiding family).
 OPERATOR_PROTOCOL = frozenset({
     "matvec", "matvec_local", "pad_exchange", "diag", "stencil", "dot",
     "dot2", "dotn", "sum_partials", "split_dims", "base", "spmv_dots",
-    "cg_body",
+    "cg_body", "spmv_dots3", "fused_dots", "pipe_body", "pcg_body",
+    "ppipe_body", "bicgstab_spmv_dots", "bicgstab_update1",
+    "bicgstab_spmv_update",
 })
 
 
@@ -815,7 +818,7 @@ register_method(MethodDef(
     scalars=("gamma", "delta", "gamma_prev", "alpha_prev"),
     res_scalar="gamma", init=_cg_merged_init, step=_cg_merged_step,
     variant_of="cg", reduce_hide="merged",
-    fused_kernels=("fused_cg_body", "spmv_dots"),
+    fused_kernels=("cg_body", "spmv_dots"),
     fused_init=_cg_merged_fused_init, fused_step=_cg_merged_fused_step,
     guard=_nonpositive_guard(6),        # delta = r·Ar: A not SPD
     refresh=_cg_merged_refresh, refresh_spmvs=3))
@@ -865,11 +868,28 @@ def _pcg_merged_refresh(ops, x0, state):
     return (x, r, u, p, s, w, gamma, delta, rr, gamma_prev, alpha_prev)
 
 
+def _pcg_merged_fused_step(ops, state):
+    """Merged PCG as fused HBM passes: all four vector updates in one VMEM
+    pass (``pcg_body``), the preconditioner apply on its own (Pallas)
+    kernels via ``ops.M``, then SpMV + the full reduction triple
+    (``γ = r·u``, ``δ = w·u``, true ``r·r``) in one more pass
+    (``spmv_dots3``, partials on one stacked psum).  Same recurrence as
+    :func:`_pcg_merged_step`."""
+    x, r, u, p, s, w, gamma, delta, rr, gamma_prev, alpha_prev = state
+    alpha, beta = _cg_merged_scalars(gamma, delta, gamma_prev, alpha_prev)
+    x, r, p, s = ops.A.pcg_body(alpha, beta, x, r, u, p, s, w)   # pass 1
+    u = ops.M(r)                                   # precond (own kernels)
+    w, delta_new, gamma_new, rr_new = ops.A.spmv_dots3(u, r)     # pass 2
+    return (x, r, u, p, s, w, gamma_new, delta_new, rr_new, gamma, alpha)
+
+
 register_method(MethodDef(
     name="pcg_merged", vectors=("x", "r", "u", "p", "s", "w"),
     scalars=("gamma", "delta", "rr", "gamma_prev", "alpha_prev"),
     res_scalar="rr", init=_pcg_merged_init, step=_pcg_merged_step,
     variant_of="pcg", reduce_hide="merged", accepts_precond=True,
+    fused_kernels=("pcg_body", "spmv_dots3"),
+    fused_init=_pcg_merged_init, fused_step=_pcg_merged_fused_step,
     guard=_pcg_merged_guard,
     refresh=_pcg_merged_refresh, refresh_spmvs=3))
 
@@ -919,11 +939,29 @@ def _cg_pipe_refresh(ops, x0, state):
     return (x, r, w, p, s, z, gamma_prev, alpha_prev, rr)
 
 
+def _cg_pipe_fused_step(ops, state):
+    """Pipelined CG as TWO fused HBM passes: the body's SpMV (``n = A w``)
+    and BOTH reduction partials come out of one slab sweep
+    (``spmv_dots3`` with ``x = w`` — its first partial ``(A w)·w`` is
+    unused), then all six vector recurrences in one VMEM pass
+    (``pipe_body``).  The latency overlap the unfused form schedules
+    explicitly happens *inside* the sweep: partials accumulate while the
+    stencil streams, and the stacked psum rides the kernel boundary."""
+    x, r, w, p, s, z, gamma_prev, alpha_prev, rr = state
+    n, _nw, delta, gamma = ops.A.spmv_dots3(w, r)                # pass 1
+    alpha, beta = _cg_merged_scalars(gamma, delta, gamma_prev, alpha_prev)
+    x, r, w, p, s, z = ops.A.pipe_body(
+        alpha, beta, x, r, w, p, s, z, n)                        # pass 2
+    return (x, r, w, p, s, z, gamma, alpha, gamma)
+
+
 register_method(MethodDef(
     name="cg_pipe", vectors=("x", "r", "w", "p", "s", "z"),
     scalars=("gamma_prev", "alpha_prev", "rr"), res_scalar="rr",
     init=_cg_pipe_init, step=_cg_pipe_step,
     variant_of="cg", reduce_hide="pipelined",
+    fused_kernels=("spmv_dots3", "pipe_body"),
+    fused_init=_cg_pipe_init, fused_step=_cg_pipe_fused_step,
     refresh=_cg_pipe_refresh, refresh_spmvs=4))
 
 
@@ -973,11 +1011,29 @@ def _pcg_pipe_refresh(ops, x0, state):
     return (x, r, u, w, p, s, q, z, gamma_prev, alpha_prev, rr)
 
 
+def _pcg_pipe_fused_step(ops, state):
+    """Pipelined PCG as fused HBM passes: the reduction triple on carried
+    state in one read pass (``fused_dots``), the preconditioner apply and
+    SpMV on their own kernels, then all eight vector recurrences in one
+    VMEM pass (``ppipe_body``).  Same recurrence as
+    :func:`_pcg_pipe_step`."""
+    x, r, u, w, p, s, q, z, gamma_prev, alpha_prev, rr = state
+    gamma, delta, rr_new = ops.A.fused_dots(r, u, w)             # pass 1
+    m = ops.M(w)                                   # precond (own kernels)
+    n = ops.A.matvec(m)                                          # SpMV
+    alpha, beta = _cg_merged_scalars(gamma, delta, gamma_prev, alpha_prev)
+    x, r, u, w, p, s, q, z = ops.A.ppipe_body(
+        alpha, beta, x, r, u, w, p, s, q, z, m, n)               # pass 2
+    return (x, r, u, w, p, s, q, z, gamma, alpha, rr_new)
+
+
 register_method(MethodDef(
     name="pcg_pipe", vectors=("x", "r", "u", "w", "p", "s", "q", "z"),
     scalars=("gamma_prev", "alpha_prev", "rr"), res_scalar="rr",
     init=_pcg_pipe_init, step=_pcg_pipe_step,
     variant_of="pcg", reduce_hide="pipelined", accepts_precond=True,
+    fused_kernels=("fused_dots", "ppipe_body"),
+    fused_init=_pcg_pipe_init, fused_step=_pcg_pipe_fused_step,
     refresh=_pcg_pipe_refresh, refresh_spmvs=4))
 
 
@@ -1163,6 +1219,36 @@ and recovers ``x = x0 + M⁻¹ y`` once at exit — the residual is unchanged
 by right preconditioning, so stopping stays TRUE-residual."""
 
 
+def _make_bicgstab_merged_fused_step(preconditioned: bool):
+    def fused_step(ops, state):
+        """Single-reduction BiCGStab as THREE fused HBM passes: SpMV 1
+        (``v = A z̃``) + the intermediates ``q``/``y`` + all NINE dot
+        partials in one slab sweep (``bicgstab_spmv_dots``; partials on
+        the iteration's ONE stacked psum), the ω-half x/r/w updates in one
+        VMEM pass (``bicgstab_update1``), then SpMV 2 fused with the three
+        direction recurrences (``bicgstab_spmv_update``).  Identical
+        recurrence to the unfused step; the preconditioned form applies
+        ``M`` to each SpMV operand (right preconditioning)."""
+        y, r, w, t, p, s, z, rhat, rho, alpha, rr = state
+        zi = ops.M(z) if preconditioned else z
+        v, q, yv, parts = ops.A.bicgstab_spmv_dots(
+            zi, z, r, w, s, rhat, t, alpha)                      # pass 1
+        qy, yy, qq, rhq, rhy, rht, rhv, rhz, rhs = parts
+        omega = qy / yy
+        rr_new = jnp.maximum(qq - 2.0 * omega * qy + omega * omega * yy, 0.0)
+        rho_new = rhq - omega * rhy
+        beta = (rho_new / rho) * (alpha / omega)
+        y, r, w = ops.A.bicgstab_update1(
+            alpha, omega, y, p, q, yv, t, v)                     # pass 2
+        wi = ops.M(w) if preconditioned else w
+        t, p, s, z = ops.A.bicgstab_spmv_update(
+            wi, w, r, p, s, z, v, omega, beta)                   # pass 3
+        rhw = rhy - omega * (rht - alpha * rhv)
+        alpha_new = rho_new / (rhw + beta * (rhs - omega * rhz))
+        return (y, r, w, t, p, s, z, rhat, rho_new, alpha_new, rr_new)
+    return fused_step
+
+
 def _pbicgstab_merged_finalize(ops, x0, state):
     # the loop iterates in the preconditioned ŷ space; recover x once
     return x0 + ops.M(state[0])
@@ -1195,6 +1281,10 @@ register_method(MethodDef(
     init=_make_bicgstab_merged_init(False),
     step=_make_bicgstab_merged_step(False),
     variant_of="bicgstab", reduce_hide="merged",
+    fused_kernels=("bicgstab_spmv_dots", "bicgstab_update1",
+                   "bicgstab_spmv_update"),
+    fused_init=_make_bicgstab_merged_init(False),
+    fused_step=_make_bicgstab_merged_fused_step(False),
     guard=_rho_underflow_guard(8, 10),
     refresh=_make_bicgstab_merged_refresh(False), refresh_spmvs=5))
 
@@ -1206,6 +1296,10 @@ register_method(MethodDef(
     step=_make_bicgstab_merged_step(True),
     finalize=_pbicgstab_merged_finalize,
     variant_of="pbicgstab", reduce_hide="merged", accepts_precond=True,
+    fused_kernels=("bicgstab_spmv_dots", "bicgstab_update1",
+                   "bicgstab_spmv_update"),
+    fused_init=_make_bicgstab_merged_init(True),
+    fused_step=_make_bicgstab_merged_fused_step(True),
     guard=_rho_underflow_guard(8, 10),
     refresh=_make_bicgstab_merged_refresh(True), refresh_spmvs=5))
 

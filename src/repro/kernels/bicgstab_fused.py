@@ -1,0 +1,172 @@
+"""Pallas TPU kernels: single-reduction BiCGStab's two fused SpMV sweeps.
+
+The merged BiCGStab iteration (``core.methods.bicgstab_merged``) does two
+SpMVs and NINE stacked dot partials per step.  Unfused that is ~11 HBM
+sweeps; these two kernels plus ``fused_bodies.bicgstab_fused_update1``
+collapse the iteration to three passes:
+
+  1. ``bicgstab_fused_spmv_dots`` — the first SpMV ``v = A·z̃`` (z̃ = M(z)
+     for the preconditioned variant) fused with the intermediate vectors
+     ``q = r − αs``, ``y = w − αz`` AND all nine reduction partials
+     ``(q·y, y·y, q·q, r̂·q, r̂·y, r̂·t, r̂·v, r̂·z, r̂·s)`` — one slab
+     sweep feeds the iteration's single all-reduce.
+  2. ``bicgstab_fused_spmv_update`` — the second SpMV ``t' = A·w̃`` fused
+     with the three direction recurrences ``p' = r + β(p − ωs)``,
+     ``s' = w + β(s − ωz)``, ``z' = t' + β(z − ωv)``.
+
+Both reuse the overlapping-window slab BlockSpec of ``stencil_spmv``;
+traced scalar coefficients ride a (1, k) block.  Partial accumulation
+follows the sequential-TPU-grid idiom of ``spmv_dot.py`` (init at step 0,
+``+=`` on the revisited accumulator block), so the slab-ordered sums are
+deterministic for a fixed tiling.  Oracles:
+``kernels/ref.py::bicgstab_spmv_dots_ref`` / ``bicgstab_spmv_update_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.operators import Stencil
+from repro.kernels.stencil_spmv import _pick_bz, _window_spec, apply_stencil_slab
+
+
+def _dots_kernel(stencil: Stencil, nx: int, ny: int, bz: int):
+    def body(zin, coef, z, r, w, s, rhat, t, v_o, q_o, y_o, acc):
+        # zin: (nx+2, ny+2, bz+2) window; coef: (1, 1) = [α]; the six plain
+        # slabs and three outputs: (nx, ny, bz); acc: (1, 9) partials
+        alpha = coef[0, 0]
+        v = apply_stencil_slab(stencil, zin[...], nx, ny, bz)
+        q = r[...] - alpha * s[...]
+        y = w[...] - alpha * z[...]
+        rh = rhat[...]
+        v_o[...] = v
+        q_o[...] = q
+        y_o[...] = y
+        i = pl.program_id(0)
+
+        @pl.when(i == 0)
+        def _init():
+            acc[...] = jnp.zeros((1, 9), acc.dtype)
+
+        acc[0, 0] += jnp.sum(q * y).astype(acc.dtype)
+        acc[0, 1] += jnp.sum(y * y).astype(acc.dtype)
+        acc[0, 2] += jnp.sum(q * q).astype(acc.dtype)
+        acc[0, 3] += jnp.sum(rh * q).astype(acc.dtype)
+        acc[0, 4] += jnp.sum(rh * y).astype(acc.dtype)
+        acc[0, 5] += jnp.sum(rh * t[...]).astype(acc.dtype)
+        acc[0, 6] += jnp.sum(rh * v).astype(acc.dtype)
+        acc[0, 7] += jnp.sum(rh * z[...]).astype(acc.dtype)
+        acc[0, 8] += jnp.sum(rh * s[...]).astype(acc.dtype)
+
+    return body
+
+
+@functools.partial(jax.jit, static_argnames=("stencil", "bz", "interpret"))
+def bicgstab_fused_spmv_dots(
+    zp: jax.Array,
+    z: jax.Array,
+    r: jax.Array,
+    w: jax.Array,
+    s: jax.Array,
+    rhat: jax.Array,
+    t: jax.Array,
+    alpha: jax.Array,
+    *,
+    stencil: Stencil,
+    bz: int = 8,
+    interpret: bool = True,
+):
+    """``v = A·z̃`` + intermediates ``q, y`` + all 9 partials, one sweep.
+
+    ``zp``: (nx+2, ny+2, nz+2) halo-padded SpMV operand (``M(z)`` when
+    preconditioned, else ``z``); the six interior-shaped vectors stream
+    alongside.  Returns ``(v, q, y, parts)`` with ``parts`` the 9-tuple
+    ``(q·y, y·y, q·q, r̂·q, r̂·y, r̂·t, r̂·v, r̂·z, r̂·s)``.
+    """
+    nx, ny, nz = zp.shape[0] - 2, zp.shape[1] - 2, zp.shape[2] - 2
+    bz = _pick_bz(nz, bz)
+    acc_dtype = jnp.float32 if zp.dtype == jnp.bfloat16 else zp.dtype
+    coef = alpha.astype(zp.dtype).reshape(1, 1)
+    slab = lambda: pl.BlockSpec((nx, ny, bz), lambda i: (0, 0, i))
+
+    v, q, y, acc = pl.pallas_call(
+        _dots_kernel(stencil, nx, ny, bz),
+        grid=(nz // bz,),
+        in_specs=[
+            _window_spec(nx, ny, bz),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            slab(), slab(), slab(), slab(), slab(), slab(),
+        ],
+        out_specs=[
+            slab(), slab(), slab(),
+            pl.BlockSpec((1, 9), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nx, ny, nz), zp.dtype),
+            jax.ShapeDtypeStruct((nx, ny, nz), zp.dtype),
+            jax.ShapeDtypeStruct((nx, ny, nz), zp.dtype),
+            jax.ShapeDtypeStruct((1, 9), acc_dtype),
+        ],
+        interpret=interpret,
+    )(zp, coef, z, r, w, s, rhat, t)
+    return v, q, y, tuple(acc[0, k] for k in range(9))
+
+
+def _update_kernel(stencil: Stencil, nx: int, ny: int, bz: int):
+    def body(win, coef, w, r, p, s, z, v, t_o, p_o, s_o, z_o):
+        # win: (nx+2, ny+2, bz+2) window; coef: (1, 2) = [ω, β]
+        omega = coef[0, 0]
+        beta = coef[0, 1]
+        t_new = apply_stencil_slab(stencil, win[...], nx, ny, bz)
+        t_o[...] = t_new
+        p_o[...] = r[...] + beta * (p[...] - omega * s[...])
+        s_o[...] = w[...] + beta * (s[...] - omega * z[...])
+        z_o[...] = t_new + beta * (z[...] - omega * v[...])
+
+    return body
+
+
+@functools.partial(jax.jit, static_argnames=("stencil", "bz", "interpret"))
+def bicgstab_fused_spmv_update(
+    wp: jax.Array,
+    w: jax.Array,
+    r: jax.Array,
+    p: jax.Array,
+    s: jax.Array,
+    z: jax.Array,
+    v: jax.Array,
+    omega: jax.Array,
+    beta: jax.Array,
+    *,
+    stencil: Stencil,
+    bz: int = 8,
+    interpret: bool = True,
+):
+    """``t' = A·w̃`` + the three direction recurrences, one sweep.
+
+    ``wp``: (nx+2, ny+2, nz+2) halo-padded SpMV operand (``M(w')`` when
+    preconditioned, else ``w'``).  Returns ``(t', p', s', z')`` with
+    ``p' = r + β(p − ωs)``, ``s' = w + β(s − ωz)``, ``z' = t' + β(z − ωv)``.
+    """
+    nx, ny, nz = wp.shape[0] - 2, wp.shape[1] - 2, wp.shape[2] - 2
+    bz = _pick_bz(nz, bz)
+    coef = jnp.stack([omega, beta]).astype(wp.dtype).reshape(1, 2)
+    slab = lambda: pl.BlockSpec((nx, ny, bz), lambda i: (0, 0, i))
+
+    outs = pl.pallas_call(
+        _update_kernel(stencil, nx, ny, bz),
+        grid=(nz // bz,),
+        in_specs=[
+            _window_spec(nx, ny, bz),
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+            slab(), slab(), slab(), slab(), slab(), slab(),
+        ],
+        out_specs=[slab(), slab(), slab(), slab()],
+        out_shape=[jax.ShapeDtypeStruct((nx, ny, nz), wp.dtype)] * 4,
+        interpret=interpret,
+    )(wp, coef, w, r, p, s, z, v)
+    return tuple(outs)

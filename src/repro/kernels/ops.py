@@ -16,10 +16,24 @@ from repro.kernels.cg_fused_update import (
     cg_fused_update as _cg_fused_update,
     fused_cg_body as _fused_cg_body,
 )
-from repro.kernels.spmv_dot import stencil_spmv_dots as _stencil_spmv_dots
+from repro.kernels.spmv_dot import (
+    stencil_spmv_dots as _stencil_spmv_dots,
+    stencil_spmv_dots3 as _stencil_spmv_dots3,
+)
 from repro.kernels.fused_axpby import (
     fused_axpby as _fused_axpby,
     fused_axpby_dot as _fused_axpby_dot,
+)
+from repro.kernels.fused_bodies import (
+    bicgstab_fused_update1 as _bicgstab_fused_update1,
+    fused_dots as _fused_dots,
+    fused_pcg_body as _fused_pcg_body,
+    fused_pipe_body as _fused_pipe_body,
+    fused_ppipe_body as _fused_ppipe_body,
+)
+from repro.kernels.bicgstab_fused import (
+    bicgstab_fused_spmv_dots as _bicgstab_fused_spmv_dots,
+    bicgstab_fused_spmv_update as _bicgstab_fused_spmv_update,
 )
 from repro.kernels.flash_attention import flash_attention as _flash_attention
 from repro.kernels.precond import (
@@ -58,13 +72,67 @@ def spmv_dots(xp: jax.Array, stencil: Stencil, *, bz: int = 8):
                               interpret=_interpret())
 
 
+def spmv_dots3(xp: jax.Array, r: jax.Array, stencil: Stencil, *, bz: int = 8):
+    """``(A·x, (A·x)·x, r·x, r·r)`` in one pass (PCG/pipe reduction triple)."""
+    return _stencil_spmv_dots3(xp, r, stencil=stencil, bz=bz,
+                               interpret=_interpret())
+
+
+def fused_dots(a, b, c, *, br: int = 256):
+    """Stacked partial dots ``(a·b, c·b, a·a)`` in one read pass."""
+    return _fused_dots(a, b, c, br=br, interpret=_interpret())
+
+
+def pipe_body(alpha, beta, x, r, w, p, s, z, n, *, br: int = 64):
+    """Pipelined CG's six recurrences -> (x', r', w', p', s', z')."""
+    return _fused_pipe_body(alpha, beta, x, r, w, p, s, z, n, br=br,
+                            interpret=_interpret())
+
+
+def pcg_body(alpha, beta, x, r, u, p, s, w, *, br: int = 128):
+    """Merged PCG's four vector updates -> (x', r', p', s')."""
+    return _fused_pcg_body(alpha, beta, x, r, u, p, s, w, br=br,
+                           interpret=_interpret())
+
+
+def ppipe_body(alpha, beta, x, r, u, w, p, s, q, z, m, n, *, br: int = 64):
+    """Pipelined PCG's eight recurrences -> (x', r', u', w', p', s', q', z')."""
+    return _fused_ppipe_body(alpha, beta, x, r, u, w, p, s, q, z, m, n,
+                             br=br, interpret=_interpret())
+
+
+def bicgstab_update1(alpha, omega, y, p, q, yv, t, v, *, br: int = 128):
+    """BiCGStab's ω-half x/r/w updates -> (y', r', w')."""
+    return _bicgstab_fused_update1(alpha, omega, y, p, q, yv, t, v, br=br,
+                                   interpret=_interpret())
+
+
+def bicgstab_spmv_dots(zp, z, r, w, s, rhat, t, alpha, stencil: Stencil, *,
+                       bz: int = 8):
+    """BiCGStab sweep 1: ``v = A·z̃`` + ``q``/``y`` + 9 dot partials."""
+    return _bicgstab_fused_spmv_dots(
+        zp, z, r, w, s, rhat, t, alpha, stencil=stencil, bz=bz,
+        interpret=_interpret()
+    )
+
+
+def bicgstab_spmv_update(wp, w, r, p, s, z, v, omega, beta, stencil: Stencil,
+                         *, bz: int = 8):
+    """BiCGStab sweep 2: ``t' = A·w̃`` + direction recurrences."""
+    return _bicgstab_fused_spmv_update(
+        wp, w, r, p, s, z, v, omega, beta, stencil=stencil, bz=bz,
+        interpret=_interpret()
+    )
+
+
 def cg_update(beta, r, ar, p, ap):
     return _cg_fused_update(beta, r, ar, p, ap, interpret=_interpret())
 
 
-def cg_body(alpha, beta, x, r, p, s, w):
+def cg_body(alpha, beta, x, r, p, s, w, *, br: int = 128):
     """Merged-CG's four vector updates in one VMEM pass -> (x', r', p', s')."""
-    return _fused_cg_body(alpha, beta, x, r, p, s, w, interpret=_interpret())
+    return _fused_cg_body(alpha, beta, x, r, p, s, w, br=br,
+                          interpret=_interpret())
 
 
 def gs_half_sweep(xp, b, stencil: Stencil, colour: int, *, bz: int = 8):

@@ -29,11 +29,86 @@ def stencil_spmv_dots_ref(xp: jax.Array, *, stencil: Stencil):
     return y, jnp.sum(ya * xa), jnp.sum(xa * xa)
 
 
+def stencil_spmv_dots3_ref(xp: jax.Array, r: jax.Array, *, stencil: Stencil):
+    """SpMV + the reduction triple: ``(A x, (A x)·x, r·x, r·r)``."""
+    y = stencil.matvec_padded(xp)
+    x = xp[1:-1, 1:-1, 1:-1]
+    acc_dtype = jnp.float32 if xp.dtype == jnp.bfloat16 else xp.dtype
+    ya = y.astype(acc_dtype)
+    xa = x.astype(acc_dtype)
+    ra = r.astype(acc_dtype)
+    return y, jnp.sum(ya * xa), jnp.sum(ra * xa), jnp.sum(ra * ra)
+
+
 def fused_cg_body_ref(alpha, beta, x, r, p, s, w):
     """Merged-CG vector updates: p' = r+βp, s' = w+βs, x' = x+αp', r' = r−αs'."""
     p_new = r + beta * p
     s_new = w + beta * s
     return x + alpha * p_new, r - alpha * s_new, p_new, s_new
+
+
+def fused_dots_ref(a, b, c):
+    """Stacked partial dots ``(a·b, c·b, a·a)`` (pipelined PCG's triple)."""
+    acc_dtype = jnp.float32 if a.dtype == jnp.bfloat16 else a.dtype
+    aa = a.astype(acc_dtype)
+    ba = b.astype(acc_dtype)
+    ca = c.astype(acc_dtype)
+    return jnp.sum(aa * ba), jnp.sum(ca * ba), jnp.sum(aa * aa)
+
+
+def fused_pipe_body_ref(alpha, beta, x, r, w, p, s, z, n):
+    """Pipelined CG's six recurrences (Ghysels–Vanroose ordering)."""
+    z_new = n + beta * z
+    s_new = w + beta * s
+    p_new = r + beta * p
+    return (x + alpha * p_new, r - alpha * s_new, w - alpha * z_new,
+            p_new, s_new, z_new)
+
+
+def fused_pcg_body_ref(alpha, beta, x, r, u, p, s, w):
+    """Merged PCG's updates: p' = u+βp, s' = w+βs, x' = x+αp', r' = r−αs'."""
+    p_new = u + beta * p
+    s_new = w + beta * s
+    return x + alpha * p_new, r - alpha * s_new, p_new, s_new
+
+
+def fused_ppipe_body_ref(alpha, beta, x, r, u, w, p, s, q, z, m, n):
+    """Pipelined PCG's eight recurrences."""
+    z_new = n + beta * z
+    q_new = m + beta * q
+    s_new = w + beta * s
+    p_new = u + beta * p
+    return (x + alpha * p_new, r - alpha * s_new, u - alpha * q_new,
+            w - alpha * z_new, p_new, s_new, q_new, z_new)
+
+
+def bicgstab_spmv_dots_ref(zp, z, r, w, s, rhat, t, alpha, *, stencil: Stencil):
+    """First BiCGStab sweep: ``v = A·z̃``, ``q``, ``y`` and all 9 partials."""
+    v = stencil.matvec_padded(zp)
+    q = r - alpha * s
+    y = w - alpha * z
+    acc_dtype = jnp.float32 if zp.dtype == jnp.bfloat16 else zp.dtype
+    d = lambda a, b: jnp.sum(a.astype(acc_dtype) * b.astype(acc_dtype))
+    parts = (d(q, y), d(y, y), d(q, q), d(rhat, q), d(rhat, y),
+             d(rhat, t), d(rhat, v), d(rhat, z), d(rhat, s))
+    return v, q, y, parts
+
+
+def bicgstab_update1_ref(alpha, omega, y, p, q, yv, t, v):
+    """BiCGStab ω-half: y' = y+αp+ωq, r' = q−ω·yv, w' = yv−ω(t−αv)."""
+    return (y + alpha * p + omega * q,
+            q - omega * yv,
+            yv - omega * (t - alpha * v))
+
+
+def bicgstab_spmv_update_ref(wp, w, r, p, s, z, v, omega, beta, *,
+                             stencil: Stencil):
+    """Second BiCGStab sweep: ``t' = A·w̃`` + the direction recurrences."""
+    t_new = stencil.matvec_padded(wp)
+    return (t_new,
+            r + beta * (p - omega * s),
+            w + beta * (s - omega * z),
+            t_new + beta * (z - omega * v))
 
 
 def fused_axpby_ref(a, x, b, y, c, z):

@@ -13,6 +13,13 @@ Extends ``kernels/stencil_spmv.py``'s ``fuse_dot`` (which emits only
 same sequential-grid accumulation (TPU grid steps run in order, so the
 revisited (1, 2) accumulator block is well-defined).  Oracle:
 ``kernels/ref.py::stencil_spmv_dots_ref``.
+
+``stencil_spmv_dots3`` (PR 10) is the same pass with a second (unpadded)
+streamed operand ``r`` and a (1, 3) accumulator — the reduction triple the
+preconditioned/pipelined variants need: with ``x = u`` it yields merged
+PCG's ``(A u, (A u)·u, r·u, r·r)``; with ``x = w`` pipelined CG reads the
+``r·w``/``r·r`` slots and ignores the first.  Oracle:
+``kernels/ref.py::stencil_spmv_dots3_ref``.
 """
 
 from __future__ import annotations
@@ -79,3 +86,65 @@ def stencil_spmv_dots(
         interpret=interpret,
     )(xp)
     return y, acc[0, 0], acc[0, 1]
+
+
+def _kernel3(stencil: Stencil, nx: int, ny: int, bz: int):
+    def body(xin, rin, out, acc):
+        # xin: (nx+2, ny+2, bz+2) overlapping window; rin/out: (nx, ny, bz);
+        # acc: (1, 3) = [Σ y·x, Σ r·x, Σ r·r] partials, revisited per step
+        x_slab = xin[...]
+        centre = x_slab[1:-1, 1:-1, 1:-1]
+        r_slab = rin[...]
+        y = apply_stencil_slab(stencil, x_slab, nx, ny, bz)
+        out[...] = y
+        i = pl.program_id(0)
+
+        @pl.when(i == 0)
+        def _init():
+            acc[...] = jnp.zeros((1, 3), acc.dtype)
+
+        acc[0, 0] += jnp.sum(y * centre).astype(acc.dtype)
+        acc[0, 1] += jnp.sum(r_slab * centre).astype(acc.dtype)
+        acc[0, 2] += jnp.sum(r_slab * r_slab).astype(acc.dtype)
+
+    return body
+
+
+@functools.partial(jax.jit, static_argnames=("stencil", "bz", "interpret"))
+def stencil_spmv_dots3(
+    xp: jax.Array,
+    r: jax.Array,
+    *,
+    stencil: Stencil,
+    bz: int = 8,
+    interpret: bool = True,
+):
+    """``y = A·x`` plus the THREE partials ``(y·x, r·x, r·r)``, one pass.
+
+    ``xp``: (nx+2, ny+2, nz+2) halo-padded SpMV operand; ``r``: (nx, ny, nz)
+    streamed alongside.  For merged PCG with ``x = u = M⁻¹r`` this is
+    ``(w, δ, γ, ‖r‖²)``; pipelined CG calls it with ``x = w`` and reads the
+    ``r·w``/``r·r`` slots.
+    """
+    nx, ny, nz = xp.shape[0] - 2, xp.shape[1] - 2, xp.shape[2] - 2
+    bz = _pick_bz(nz, bz)
+    acc_dtype = jnp.float32 if xp.dtype == jnp.bfloat16 else xp.dtype
+
+    y, acc = pl.pallas_call(
+        _kernel3(stencil, nx, ny, bz),
+        grid=(nz // bz,),
+        in_specs=[
+            _window_spec(nx, ny, bz),
+            pl.BlockSpec((nx, ny, bz), lambda i: (0, 0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((nx, ny, bz), lambda i: (0, 0, i)),
+            pl.BlockSpec((1, 3), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nx, ny, nz), xp.dtype),
+            jax.ShapeDtypeStruct((1, 3), acc_dtype),
+        ],
+        interpret=interpret,
+    )(xp, r)
+    return y, acc[0, 0], acc[0, 1], acc[0, 2]

@@ -98,6 +98,123 @@ def test_fused_cg_body(n, dt):
     assert not np.allclose(x_new, np.asarray(x + alpha * p), atol=1e-6)
 
 
+@pytest.mark.parametrize("stencil", STENCILS, ids=lambda s: s.name)
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dt", DTYPES, ids=str)
+def test_spmv_dots3(stencil, shape, dt):
+    """The PCG/pipelined reduction triple: SpMV + 3 dot partials, one pass."""
+    ks = jax.random.split(jax.random.PRNGKey(12), 2)
+    x, r = (jax.random.normal(k, shape, dt) for k in ks)
+    xp = jnp.pad(x, 1)
+    y, yx, rx, rr = ops.spmv_dots3(xp, r, stencil)
+    yr, yxr, rxr, rrr = ref.stencil_spmv_dots3_ref(xp, r, stencil=stencil)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), **tols(dt))
+    rt = 1e-3 if dt == jnp.float32 else 1e-12
+    for d, dr in ((yx, yxr), (rx, rxr), (rr, rrr)):
+        np.testing.assert_allclose(float(d), float(dr), rtol=rt)
+
+
+@pytest.mark.parametrize("n", [1000, 4096, 5000])
+@pytest.mark.parametrize("dt", DTYPES, ids=str)
+def test_fused_dots(n, dt):
+    ks = jax.random.split(jax.random.PRNGKey(13), 3)
+    a, b, c = (jax.random.normal(k, (n,), dt) for k in ks)
+    outs = ops.fused_dots(a, b, c)
+    refs = ref.fused_dots_ref(a, b, c)
+    rt = 1e-3 if dt == jnp.float32 else 1e-12
+    for o, orf in zip(outs, refs):
+        np.testing.assert_allclose(float(o), float(orf), rtol=rt)
+
+
+@pytest.mark.parametrize("n", [1000, 4096, 5000])
+@pytest.mark.parametrize("dt", DTYPES, ids=str)
+def test_fused_pipe_body(n, dt):
+    """Pipelined CG's six recurrences in one read pass, in the
+    Ghysels–Vanroose ordering (x/r/w consume the UPDATED p/s/z)."""
+    ks = jax.random.split(jax.random.PRNGKey(14), 7)
+    x, r, w, p, s, z, nn = (jax.random.normal(k, (n,), dt) for k in ks)
+    alpha, beta = jnp.asarray(0.41, dt), jnp.asarray(-0.9, dt)
+    outs = ops.pipe_body(alpha, beta, x, r, w, p, s, z, nn)
+    refs = ref.fused_pipe_body_ref(alpha, beta, x, r, w, p, s, z, nn)
+    for o, orf in zip(outs, refs):
+        np.testing.assert_allclose(np.asarray(o), np.asarray(orf), **tols(dt))
+
+
+@pytest.mark.parametrize("n", [1000, 4096, 5000])
+@pytest.mark.parametrize("dt", DTYPES, ids=str)
+def test_fused_pcg_body(n, dt):
+    ks = jax.random.split(jax.random.PRNGKey(15), 6)
+    x, r, u, p, s, w = (jax.random.normal(k, (n,), dt) for k in ks)
+    alpha, beta = jnp.asarray(0.29, dt), jnp.asarray(1.7, dt)
+    outs = ops.pcg_body(alpha, beta, x, r, u, p, s, w)
+    refs = ref.fused_pcg_body_ref(alpha, beta, x, r, u, p, s, w)
+    for o, orf in zip(outs, refs):
+        np.testing.assert_allclose(np.asarray(o), np.asarray(orf), **tols(dt))
+
+
+@pytest.mark.parametrize("n", [1000, 4096, 5000])
+@pytest.mark.parametrize("dt", DTYPES, ids=str)
+def test_fused_ppipe_body(n, dt):
+    ks = jax.random.split(jax.random.PRNGKey(16), 10)
+    x, r, u, w, p, s, q, z, m, nn = (
+        jax.random.normal(k, (n,), dt) for k in ks)
+    alpha, beta = jnp.asarray(0.53, dt), jnp.asarray(-0.6, dt)
+    outs = ops.ppipe_body(alpha, beta, x, r, u, w, p, s, q, z, m, nn)
+    refs = ref.fused_ppipe_body_ref(alpha, beta, x, r, u, w, p, s, q, z,
+                                    m, nn)
+    for o, orf in zip(outs, refs):
+        np.testing.assert_allclose(np.asarray(o), np.asarray(orf), **tols(dt))
+
+
+@pytest.mark.parametrize("n", [1000, 4096, 5000])
+@pytest.mark.parametrize("dt", DTYPES, ids=str)
+def test_bicgstab_update1(n, dt):
+    ks = jax.random.split(jax.random.PRNGKey(17), 6)
+    y, p, q, yv, t, v = (jax.random.normal(k, (n,), dt) for k in ks)
+    alpha, omega = jnp.asarray(0.73, dt), jnp.asarray(0.31, dt)
+    outs = ops.bicgstab_update1(alpha, omega, y, p, q, yv, t, v)
+    refs = ref.bicgstab_update1_ref(alpha, omega, y, p, q, yv, t, v)
+    for o, orf in zip(outs, refs):
+        np.testing.assert_allclose(np.asarray(o), np.asarray(orf), **tols(dt))
+
+
+@pytest.mark.parametrize("stencil", STENCILS, ids=lambda s: s.name)
+@pytest.mark.parametrize("dt", DTYPES, ids=str)
+def test_bicgstab_spmv_dots(stencil, dt):
+    """BiCGStab sweep 1: SpMV + q/y recurrences + 9 stacked dot partials."""
+    shape = (12, 10, 16)
+    ks = jax.random.split(jax.random.PRNGKey(18), 7)
+    zi, z, r, w, s, rhat, t = (jax.random.normal(k, shape, dt) for k in ks)
+    alpha = jnp.asarray(0.47, dt)
+    zp = jnp.pad(zi, 1)
+    v, q, y, parts = ops.bicgstab_spmv_dots(zp, z, r, w, s, rhat, t,
+                                            alpha, stencil)
+    vr, qr, yr, partsr = ref.bicgstab_spmv_dots_ref(zp, z, r, w, s, rhat, t,
+                                                    alpha, stencil=stencil)
+    for o, orf in ((v, vr), (q, qr), (y, yr)):
+        np.testing.assert_allclose(np.asarray(o), np.asarray(orf), **tols(dt))
+    rt = 1e-3 if dt == jnp.float32 else 1e-12
+    for d, dr in zip(parts, partsr):
+        np.testing.assert_allclose(float(d), float(dr), rtol=rt)
+
+
+@pytest.mark.parametrize("stencil", STENCILS, ids=lambda s: s.name)
+@pytest.mark.parametrize("dt", DTYPES, ids=str)
+def test_bicgstab_spmv_update(stencil, dt):
+    """BiCGStab sweep 2: SpMV + the β/ω direction recurrences."""
+    shape = (12, 10, 16)
+    ks = jax.random.split(jax.random.PRNGKey(19), 7)
+    wi, w, r, p, s, z, v = (jax.random.normal(k, shape, dt) for k in ks)
+    omega, beta = jnp.asarray(0.21, dt), jnp.asarray(-1.1, dt)
+    wp = jnp.pad(wi, 1)
+    outs = ops.bicgstab_spmv_update(wp, w, r, p, s, z, v, omega, beta,
+                                    stencil)
+    refs = ref.bicgstab_spmv_update_ref(wp, w, r, p, s, z, v, omega, beta,
+                                        stencil=stencil)
+    for o, orf in zip(outs, refs):
+        np.testing.assert_allclose(np.asarray(o), np.asarray(orf), **tols(dt))
+
+
 @pytest.mark.parametrize("dt", DTYPES, ids=str)
 def test_cg_fused_update(dt):
     ks = jax.random.split(jax.random.PRNGKey(3), 4)

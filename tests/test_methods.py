@@ -103,6 +103,24 @@ def test_registry_metadata_validated_against_method_def():
             METHODS["cg_merged"])
 
 
+def test_fused_kernels_require_fused_body_and_pallas_hooks():
+    """PR 10 regression: a spec may only advertise ``fused_kernels`` when the
+    MethodDef actually carries a fused body, and every advertised hook must
+    exist on PallasOp — otherwise session routing would silently fall back."""
+    import dataclasses
+    # spec claims fused kernels, but the plain-cg MethodDef has no fused body
+    spec = dataclasses.replace(REGISTRY["cg"], fused_kernels=("cg_body",))
+    with pytest.raises(RegistryConsistencyError, match="no fused body"):
+        _validate_against_method(spec, METHODS["cg"])
+    # spec/mdef agree on a hook name that PallasOp does not implement
+    mdef = dataclasses.replace(METHODS["cg_merged"],
+                               fused_kernels=("not_a_hook",))
+    spec = dataclasses.replace(REGISTRY["cg_merged"],
+                               fused_kernels=("not_a_hook",))
+    with pytest.raises(RegistryConsistencyError, match="PallasOp"):
+        _validate_against_method(spec, mdef)
+
+
 def test_register_solver_requires_a_method_def():
     from repro.api.registry import register_solver
     with pytest.raises(RegistryConsistencyError, match="no MethodDef"):

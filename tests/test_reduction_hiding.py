@@ -130,29 +130,71 @@ def test_batched_matches_single_solves(method):
 
 
 # -----------------------------------------------------------------------------
-# The fused Pallas iteration path (method="cg_merged", pallas=True, local)
+# The fused Pallas iteration path (pallas=True: the whole reduction-hiding
+# family since PR 10, local AND shard_map)
 # -----------------------------------------------------------------------------
 
-def test_fused_cg_merged_facade_path():
-    kw = dict(method="cg_merged", grid=(16, 16, 16), stencil="27pt")
+#: every method with a MethodDef fused body (PR 10 grew this from cg_merged
+#: to the full family) — each gets the same facade-parity gate cg_merged had
+FUSED_METHODS = sorted(VARIANTS)
+
+
+@pytest.mark.parametrize("method", FUSED_METHODS)
+def test_fused_facade_path_matches_unfused(method):
+    """pallas=True routes to the fused Pallas body; same iteration count
+    and machine-precision agreement with the unfused facade solve."""
+    kw = dict(method=method, grid=(16, 16, 16), stencil="27pt")
     plain = solve(**kw, options=SolverOptions(tol=1e-8, maxiter=300))
     fused = solve(**kw, options=SolverOptions(tol=1e-8, maxiter=300,
                                               pallas=True))
-    assert int(fused.iters) == int(plain.iters)
+    assert int(fused.iters) == int(plain.iters), method
     np.testing.assert_allclose(np.asarray(fused.x), np.asarray(plain.x),
-                               rtol=1e-12, atol=1e-12)
+                               rtol=1e-12, atol=1e-12, err_msg=method)
 
 
-def test_fused_cg_merged_runs_under_shard_map(mesh1):
+@pytest.mark.parametrize("method", ["cg_merged", "cg_pipe",
+                                    "bicgstab_merged"])
+def test_fused_runs_under_shard_map(method, mesh1):
     """PR 5: the fused Pallas body is no longer a local-only special case —
-    on a mesh backend the facade routes ``cg_merged`` + ``pallas=True``
-    through ``solve_shardmap(pallas_fused=True)`` (PallasOp inside the
-    shard_map body).  On the trivial 1-device mesh the result must match
-    the local fused solve."""
+    on a mesh backend the facade routes ``pallas=True`` through
+    ``solve_shardmap(pallas_fused=True)`` (PallasOp inside the shard_map
+    body).  On the trivial 1-device mesh the result must match the local
+    fused solve."""
     prob = make_problem((16, 16, 16), "27pt")
     opts = SolverOptions(tol=1e-8, maxiter=300, pallas=True)
-    local = solve(prob, method="cg_merged", options=opts)
-    dist = solve(prob, method="cg_merged", options=opts, mesh=mesh1)
+    local = solve(prob, method=method, options=opts)
+    dist = solve(prob, method=method, options=opts, mesh=mesh1)
+    assert int(dist.iters) == int(local.iters), method
+    np.testing.assert_allclose(np.asarray(dist.x), np.asarray(local.x),
+                               rtol=1e-12, atol=1e-12, err_msg=method)
+
+
+@pytest.mark.parametrize("precond", ["chebyshev", "block_jacobi"])
+def test_fused_pcg_merged_composes_preconditioner(precond):
+    """The tentpole composition: ``pcg_merged`` + a fused-kernel
+    preconditioner runs END-TO-END on the fused path (the preconditioner's
+    own Pallas kernels inside the fused Krylov body) with bitwise-equal
+    iteration counts and machine-precision agreement vs the unfused
+    facade."""
+    kw = dict(method="pcg_merged", grid=(16, 16, 16), stencil="27pt")
+    plain = solve(**kw, options=SolverOptions(tol=1e-8, maxiter=300,
+                                              precond=precond))
+    fused = solve(**kw, options=SolverOptions(tol=1e-8, maxiter=300,
+                                              precond=precond, pallas=True))
+    assert int(fused.iters) == int(plain.iters), precond
+    np.testing.assert_allclose(np.asarray(fused.x), np.asarray(plain.x),
+                               rtol=1e-12, atol=1e-12, err_msg=precond)
+
+
+def test_fused_pcg_merged_chebyshev_under_shard_map(mesh1):
+    """The composed fused path (pcg_merged + chebyshev) under shard_map:
+    PallasOp wraps the DistributedOp, the preconditioner binds against it,
+    and the result matches the local composed fused solve."""
+    prob = make_problem((16, 16, 16), "27pt")
+    opts = SolverOptions(tol=1e-8, maxiter=300, precond="chebyshev",
+                         pallas=True)
+    local = solve(prob, method="pcg_merged", options=opts)
+    dist = solve(prob, method="pcg_merged", options=opts, mesh=mesh1)
     assert int(dist.iters) == int(local.iters)
     np.testing.assert_allclose(np.asarray(dist.x), np.asarray(local.x),
                                rtol=1e-12, atol=1e-12)
@@ -162,7 +204,7 @@ def test_fused_routing_is_capability_based():
     """The facade's Pallas routing queries the registry capability (any
     method whose MethodDef declares a fused body), not a hard-coded name."""
     from repro.api.registry import fused_solver_names
-    assert fused_solver_names() == ["cg_merged"]
+    assert fused_solver_names() == FUSED_METHODS
     prob = make_problem((8, 8, 8), "27pt")
     fused = SolverSession(prob, method="cg_merged",
                           options=SolverOptions(pallas=True))
